@@ -1,0 +1,76 @@
+"""§Roofline table generator: reads experiments/dryrun/*.json (the compiled
+dry-run artifacts) and emits the per-(arch x shape) three-term roofline —
+compute / memory / collective seconds, dominant term, MODEL_FLOPS ratio —
+for the single-pod mesh (multi-pod shown as a fits/compiles column).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(pattern: str = "*__1pod.json") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        r = json.load(open(path))
+        if r.get("ok"):
+            rows.append(r)
+    return rows
+
+
+def cell_row(r: Dict) -> Dict:
+    rf = r["roofline"]
+    return dict(
+        arch=r["arch"],
+        shape=r["shape"],
+        job=r["job"],
+        compute_s=rf["compute_s"],
+        memory_s=rf["memory_s"],
+        collective_s=rf["collective_s"],
+        dominant=rf["dominant"],
+        model_flops=rf["model_flops_global"],
+        useful_ratio=rf["useful_flops_ratio"],
+        mfu_bound=rf["mfu_bound"],
+        mem_gb=r.get("bytes_per_device", 0) / 1e9,
+        fits=r.get("fits_16gb"),
+        compile_s=r.get("compile_s"),
+    )
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | coll s | dominant | "
+           "useful FLOPs ratio | MFU bound | mem GB/dev | fits 16GB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        ur = f"{r['useful_ratio']:.3f}" if r["useful_ratio"] is not None else "n/a"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | {r['memory_s']:.3g} "
+            f"| {r['collective_s']:.3g} | **{r['dominant']}** | {ur} "
+            f"| {r['mfu_bound']:.4f} | {r['mem_gb']:.1f} | {'y' if r['fits'] else 'N'} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    rows = [cell_row(r) for r in load_cells()]
+    rows2 = [cell_row(r) for r in load_cells("*__2pod.json")]
+    print(markdown_table(rows))
+    print(f"\n{len(rows)} single-pod cells, {len(rows2)} multi-pod cells compiled ok")
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print("dominant-term histogram:", doms)
+    worst = sorted(rows, key=lambda r: r["mfu_bound"])[:5]
+    print("worst MFU-bound cells:", [(r["arch"], r["shape"], round(r["mfu_bound"], 5)) for r in worst])
+    coll = sorted(rows, key=lambda r: -(r["collective_s"] / max(r["compute_s"] + r["memory_s"], 1e-12)))[:5]
+    print("most collective-bound:", [(r["arch"], r["shape"]) for r in coll])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

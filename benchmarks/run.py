@@ -1,0 +1,69 @@
+"""Benchmark driver — one section per paper table/figure + framework perf.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Sections:
+  [table_iv]     paper Tab. IV reproduction (CE / throughput / power
+                 breakdown vs 5 CIM counterparts) via the Domino simulator
+  [periods]      paper §II-C instruction periodicity (p = 2(P+W), 2·S_p)
+  [collectives]  COM ring vs all-reduce ICI bytes (TPU-side data-movement
+                 claim; 8-device subprocess)
+  [kernels]      Pallas kernel micro-bench + allclose (name,us,derived CSV)
+  [roofline]     per-(arch x shape) roofline table from dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    print("=" * 72)
+    print("[table_iv] Domino vs 5 CIM accelerators (paper Tab. IV)")
+    print("=" * 72)
+    from benchmarks import table_iv
+
+    table_iv.main()
+
+    print()
+    print("=" * 72)
+    print("[periods] instruction periodicity (paper formulas)")
+    print("=" * 72)
+    from repro.core.mapping import NETWORKS, ConvSpec
+    from repro.core.schedule import conv_period, pool_period
+
+    for name, make in NETWORKS.items():
+        convs = [l for l in make() if isinstance(l, ConvSpec)][:3]
+        for l in convs:
+            pp = f" pool_p={pool_period(l)}" if l.pool_k else ""
+            print(f"{name:16s} {l.name:14s} W={l.w_in:3d} P={l.padding} -> p={conv_period(l)}{pp}")
+
+    print()
+    print("=" * 72)
+    print("[collectives] COM vs all-reduce ICI bytes (8 host devices)")
+    print("=" * 72)
+    try:
+        from benchmarks import collective_bytes
+
+        collective_bytes.main()
+    except Exception as e:  # noqa: BLE001
+        print(f"skipped: {e}")
+
+    print()
+    print("=" * 72)
+    print("[kernels] name,us_per_call,derived")
+    print("=" * 72)
+    from benchmarks import kernel_bench
+
+    kernel_bench.main()
+
+    print()
+    print("=" * 72)
+    print("[roofline] per-cell terms from dry-run artifacts")
+    print("=" * 72)
+    from benchmarks import roofline
+
+    roofline.main()
+
+
+if __name__ == "__main__":
+    main()

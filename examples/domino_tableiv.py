@@ -1,0 +1,43 @@
+"""Paper-reproduction example: run the Domino NoC simulator end to end.
+
+    PYTHONPATH=src python examples/domino_tableiv.py
+
+Maps VGG-11 onto Domino tiles, compiles the periodic instruction schedules
+(p = 2(P+W)), executes one small conv layer cycle-by-cycle through the COM
+dataflow (validating it computes a REAL convolution), then evaluates the
+full network against the paper's Tab. IV counterparts.
+"""
+import numpy as np
+
+from repro.core.mapping import ConvSpec, map_network, tiles_for, vgg11_cifar
+from repro.core.schedule import compile_layer, conv_period
+from repro.core.simulator import COMGridSim, DominoModel, reference_conv
+
+# --- 1. a real conv through the COM instruction dataflow ---
+layer = ConvSpec("demo", 3, 8, 16, 10, 10)
+rng = np.random.default_rng(0)
+w = rng.normal(size=(3, 3, 8, 16))
+x = rng.normal(size=(10, 10, 8))
+sim = COMGridSim(layer, w)
+y = sim.run(x)
+assert np.allclose(y, reference_conv(x, w, layer), atol=1e-10)
+print(f"COM dataflow == conv (exact); events: ps_hops={sim.ev.ps_hops} "
+      f"buf_push={sim.ev.buf_push} act={sim.ev.act}")
+
+# --- 2. periodic schedules ---
+scheds = compile_layer(layer)
+print(f"schedules per layer: {len(scheds)} (K²+1 — tiles share by role), "
+      f"period p=2(P+W)={conv_period(layer)}")
+
+# --- 3. map VGG-11 and evaluate vs the paper ---
+net = vgg11_cifar()
+model = DominoModel(net)
+print(f"VGG-11: {model.n_tiles} tiles, {model.n_chips} chip(s) minimum; "
+      f"exec latency {model.exec_time_us():.1f} us")
+
+from benchmarks.table_iv import implied_e_mac_pj
+
+ours = model.evaluate(implied_e_mac_pj("jia_isscc21"), n_chips=5, area_mm2=343.2)
+print(f"CE={ours['ce_tops_w']:.2f} TOPS/W (paper: 17.22) | "
+      f"on-chip {ours['onchip_w']:.2f} W (paper: 3.53) | "
+      f"off-chip {ours['offchip_w']:.3f} W (paper: 0.34)")

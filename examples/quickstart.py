@@ -1,0 +1,41 @@
+"""Quickstart: the public API in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a reduced llama-family model, takes two training steps, then serves
+a few tokens from the trained weights — the same Model/OptConfig/Engine
+objects the production launchers use.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.transformer import CallConfig, build_model
+from repro.serve.engine import Engine, Request
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+# 1. pick an assigned architecture and shrink it for CPU
+cfg = get_config("smollm-135m").reduced()
+print(f"arch: {cfg.name} ({cfg.family}), reduced to {cfg.param_count()/1e6:.1f}M params")
+
+# 2. build the functional model + optimizer state
+model = build_model(cfg, CallConfig(remat="block"))
+ocfg = OptConfig(lr=3e-3, schedule="wsd", warmup_steps=2, total_steps=20)
+params = model.init(jax.random.PRNGKey(0))
+state = {"params": params, "opt": init_opt_state(params, ocfg), "rng": jax.random.PRNGKey(0)}
+
+# 3. two jit'd train steps on a synthetic batch
+step = jax.jit(make_train_step(model, ocfg), donate_argnums=0)
+toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab_size)
+batch = {"tokens": toks, "targets": toks}
+for i in range(2):
+    state, metrics = step(state, batch)
+    print(f"step {i}: loss={float(metrics['loss']):.4f} lr={float(metrics['lr']):.2e}")
+
+# 4. serve from the same params
+eng = Engine(model, state["params"], batch=2, max_seq=64)
+reqs = [Request(prompt=np.arange(1, 9, dtype=np.int32), max_new_tokens=8)]
+out = eng.generate(reqs)
+print("generated:", out[0].out_tokens)

@@ -1,0 +1,197 @@
+"""Layer -> tile mapping (paper §III) and chip partitioning.
+
+CONV K x K x C x M  ->  K² x ceil(C/Nc) x ceil(M/Nm) tiles (kernel pixels
+unrolled ACROSS tiles, in row-major kernel order — the COM pipeline order).
+FC C_in x C_out     ->  ceil(C_in/Nc) x ceil(C_out/Nm) tiles (systolic
+column accumulation).
+
+Chips hold ``tiles_per_chip`` tiles (240 in the paper's evaluation, CIM
+arrays of 256 x 256); layers are placed greedily in network order and a
+layer spanning a chip boundary contributes its IFM/OFM traffic to the
+off-chip accounting (paper §IV-B3).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+N_C = 256  # CIM rows
+N_M = 256  # CIM cols
+TILES_PER_CHIP = 240
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    k: int           # filter size K
+    c_in: int
+    c_out: int
+    h_in: int        # input feature map height
+    w_in: int        # width
+    stride: int = 1
+    padding: int = 1
+    pool_k: int = 0   # pooling after this layer (K_p); 0 = none
+    pool_stride: int = 2
+    residual_from: Optional[str] = None  # ResNet skip source
+
+    @property
+    def h_out(self) -> int:
+        return (self.h_in + 2 * self.padding - self.k) // self.stride + 1
+
+    @property
+    def w_out(self) -> int:
+        return (self.w_in + 2 * self.padding - self.k) // self.stride + 1
+
+    @property
+    def macs(self) -> int:
+        return self.h_out * self.w_out * self.k * self.k * self.c_in * self.c_out
+
+    @property
+    def ops(self) -> int:
+        return 2 * self.macs
+
+
+@dataclass(frozen=True)
+class FCSpec:
+    name: str
+    c_in: int
+    c_out: int
+
+    @property
+    def macs(self) -> int:
+        return self.c_in * self.c_out
+
+    @property
+    def ops(self) -> int:
+        return 2 * self.macs
+
+
+LayerSpec = "ConvSpec | FCSpec"
+
+
+@dataclass
+class TileAlloc:
+    layer: LayerSpec
+    n_tiles: int
+    grid: Tuple[int, int, int]      # (K², c_blocks, m_blocks) — conv
+    chip_ids: List[int] = field(default_factory=list)
+    crosses_chip: bool = False
+
+
+def tiles_for(layer) -> Tuple[int, Tuple[int, int, int]]:
+    if isinstance(layer, ConvSpec):
+        cb = math.ceil(layer.c_in / N_C)
+        mb = math.ceil(layer.c_out / N_M)
+        return layer.k * layer.k * cb * mb, (layer.k * layer.k, cb, mb)
+    cb = math.ceil(layer.c_in / N_C)
+    mb = math.ceil(layer.c_out / N_M)
+    return cb * mb, (1, cb, mb)
+
+
+def map_network(layers: List, tiles_per_chip: int = TILES_PER_CHIP) -> List[TileAlloc]:
+    """Greedy in-order placement; returns per-layer allocations w/ chip ids."""
+    allocs: List[TileAlloc] = []
+    chip, used = 0, 0
+    for layer in layers:
+        n, grid = tiles_for(layer)
+        chips: List[int] = []
+        left = n
+        start_chip = chip
+        while left > 0:
+            take = min(left, tiles_per_chip - used)
+            if take == 0:
+                chip += 1
+                used = 0
+                continue
+            chips.append(chip)
+            used += take
+            left -= take
+        allocs.append(
+            TileAlloc(layer=layer, n_tiles=n, grid=grid, chip_ids=chips,
+                      crosses_chip=len(set(chips)) > 1 or chips[0] != start_chip)
+        )
+    return allocs
+
+
+def total_chips(allocs: List[TileAlloc]) -> int:
+    return max(c for a in allocs for c in a.chip_ids) + 1
+
+
+def weight_bytes(layers: List, precision_bits: int = 8) -> int:
+    total = 0
+    for l in layers:
+        if isinstance(l, ConvSpec):
+            total += l.k * l.k * l.c_in * l.c_out
+        else:
+            total += l.c_in * l.c_out
+    return total * precision_bits // 8
+
+
+# ---------------------------------------------------------------------------
+# Prevailing CNNs from the paper's evaluation (Tab. IV)
+# ---------------------------------------------------------------------------
+
+
+def _vgg(cfg: List, h: int, w: int, fc: List[Tuple[int, int]], name: str):
+    layers: List = []
+    c_in = 3
+    for i, v in enumerate(cfg):
+        if v == "M":
+            # pooling is fused into the preceding conv layer (paper Fig. 4)
+            prev = layers[-1]
+            layers[-1] = ConvSpec(**{**prev.__dict__, "pool_k": 2})
+            h, w = h // 2, w // 2
+            continue
+        layers.append(ConvSpec(f"{name}.conv{len(layers)}", 3, c_in, v, h, w))
+        c_in = v
+    for j, (ci, co) in enumerate(fc):
+        layers.append(FCSpec(f"{name}.fc{j}", ci, co))
+    return layers
+
+
+def vgg11_cifar() -> List:
+    return _vgg([64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"],
+                32, 32, [(512, 4096), (4096, 4096), (4096, 10)], "vgg11")
+
+
+def vgg16_imagenet() -> List:
+    return _vgg(
+        [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+         512, 512, 512, "M", 512, 512, 512, "M"],
+        224, 224, [(512 * 7 * 7, 4096), (4096, 4096), (4096, 1000)], "vgg16")
+
+
+def vgg19_imagenet() -> List:
+    return _vgg(
+        [64, 64, "M", 128, 128, "M", 256, 256, 256, 256, "M",
+         512, 512, 512, 512, "M", 512, 512, 512, 512, "M"],
+        224, 224, [(512 * 7 * 7, 4096), (4096, 4096), (4096, 1000)], "vgg19")
+
+
+def resnet18_cifar() -> List:
+    """ResNet-18 (CIFAR-10 variant, paper Tab. IV col. [17])."""
+    layers: List = [ConvSpec("rn.conv0", 3, 3, 64, 32, 32)]
+    h = w = 32
+    c = 64
+    blockcfg = [(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)]
+    for co, nblocks, stride0 in blockcfg:
+        for b in range(nblocks):
+            s = stride0 if b == 0 else 1
+            layers.append(ConvSpec(f"rn.c{co}b{b}a", 3, c, co, h, w, stride=s))
+            h, w = layers[-1].h_out, layers[-1].w_out
+            layers.append(
+                ConvSpec(f"rn.c{co}b{b}b", 3, co, co, h, w,
+                         residual_from=f"rn.c{co}b{b}a")  # skip via RIFM shortcut
+            )
+            c = co
+    layers.append(FCSpec("rn.fc", 512, 10))
+    return layers
+
+
+NETWORKS = {
+    "vgg11-cifar": vgg11_cifar,
+    "vgg16-imagenet": vgg16_imagenet,
+    "vgg19-imagenet": vgg19_imagenet,
+    "resnet18-cifar": resnet18_cifar,
+}

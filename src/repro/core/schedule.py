@@ -1,0 +1,144 @@
+"""Periodic instruction schedule compiler (paper §II-C, §III-B).
+
+Derives each tile's C-type/M-type instruction stream from the DNN layer
+configuration alone (no global controller at runtime — "dataflow is
+controlled by distributed local instructions"):
+
+* CONV, stride 1:  period  p = 2 (P + W)   [paper §II-C]
+  The factor 2 is the IFM-row / partial-sum-row interleave on the two
+  router planes; P is padding, W the IFM width.
+* CONV, stride S>1: same table with shielded control bits — actions in
+  skipped cycles are masked out (we emit NOP-masked instructions).
+* Pooling / M-type: period p = 2·S_p.
+* FC: one C-type accumulate-and-forward instruction per column hop.
+
+The compiler returns ScheduleTables; the cycle/energy simulator executes
+them directly, and tests assert the periods against the paper's formulas.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+from repro.core.isa import Buf, CInstr, Dir, Func, MInstr, ScheduleTable, Sum
+from repro.core.mapping import ConvSpec, FCSpec
+
+
+@dataclass
+class TileSchedule:
+    role: str                 # "conv" | "conv_last" | "fc" | "fc_last"
+    table: ScheduleTable
+    active_frac: float        # fraction of cycles with real work (stride shield)
+
+
+def conv_period(layer: ConvSpec) -> int:
+    return 2 * (layer.padding + layer.w_in)
+
+
+def pool_period(layer: ConvSpec) -> int:
+    return 2 * layer.pool_stride
+
+
+def compile_conv_tile(layer: ConvSpec, kpos: int, is_last_row: bool) -> TileSchedule:
+    """Schedule for the tile holding kernel pixel ``kpos`` (row-major)."""
+    p = conv_period(layer)
+    k = layer.k
+    krow, kcol = divmod(kpos, k)
+    instrs: List = []
+    # Steady state: alternate (receive IFM row segment / emit partial sums).
+    # Tile at kernel pixel (krow,kcol): receives the partial-sum stream from
+    # its predecessor (W neighbour within a kernel row; group-sum from N at
+    # row boundaries), adds the local PE result, forwards E/S.
+    first_in_row = kcol == 0
+    last_in_row = kcol == k - 1
+    for phase in range(p):
+        if phase % 2 == 0:  # IFM movement phase (RIFM plane)
+            instrs.append(CInstr(rx=Dir.W, sum=Sum.NONE, buf=Buf.HOLD, tx=Dir.E))
+        else:  # partial-sum phase (ROFM plane)
+            rx = Dir.PE if first_in_row else (Dir.W | Dir.PE)
+            s = Sum.ADD_PE if first_in_row else (Sum.ADD_RX | Sum.ADD_PE)
+            if last_in_row:
+                # row-wise addition complete -> group-sum: queue in buffer
+                # and/or combine with queued group-sum from previous rows
+                s |= Sum.WR_BUF if krow < k - 1 else Sum.ADD_BUF
+                tx = Dir.S if krow < k - 1 else Dir.S
+                buf = Buf.PUSH if krow < k - 1 else Buf.POP
+            else:
+                tx = Dir.E
+                buf = Buf.HOLD
+            instrs.append(CInstr(rx=rx, sum=s, buf=buf, tx=tx))
+    active = 1.0 / (layer.stride * layer.stride)  # shielded cycles for S>1
+    role = "conv_last" if is_last_row else "conv"
+    table = ScheduleTable(instrs, period=p)
+    return TileSchedule(role=role, table=table, active_frac=active)
+
+
+def compile_last_row_mtype(layer: ConvSpec) -> TileSchedule:
+    """M-type stream for the last-row tile: activation (+ pooling)."""
+    instrs: List = [MInstr(rx=Dir.PE, func=Func.ACT, tx=Dir.S)]
+    if layer.pool_k:
+        p = pool_period(layer)
+        # Cmp chain across the pooling window; emit result every p cycles
+        for i in range(p - 1):
+            instrs.append(MInstr(rx=Dir.W, func=Func.CMP, tx=Dir.NONE))
+        instrs.append(MInstr(rx=Dir.W, func=Func.CMP, tx=Dir.S))
+    if layer.residual_from is not None:
+        instrs.append(MInstr(rx=Dir.W, func=Func.BP, tx=Dir.S))  # skip path
+    table = ScheduleTable(instrs, period=max(len(instrs), 1))
+    return TileSchedule(role="conv_last", table=table, active_frac=1.0)
+
+
+def compile_fc_tile(layer: FCSpec, row: int, n_rows: int) -> TileSchedule:
+    """FC systolic column: add own MVM slice to arriving sum, forward S."""
+    last = row == n_rows - 1
+    s = Sum.ADD_PE if row == 0 else (Sum.ADD_RX | Sum.ADD_PE)
+    rx = Dir.PE if row == 0 else (Dir.N | Dir.PE)
+    instrs: List = [CInstr(rx=rx, sum=s, buf=Buf.HOLD, tx=Dir.S)]
+    if last:
+        instrs.append(MInstr(rx=Dir.PE, func=Func.ACT, tx=Dir.S))
+    return TileSchedule(
+        role="fc_last" if last else "fc",
+        table=ScheduleTable(instrs, period=len(instrs)),
+        active_frac=1.0,
+    )
+
+
+def compile_layer(layer) -> Dict[str, TileSchedule]:
+    """All distinct tile schedules of one layer (tiles sharing a role share
+    a schedule — this is what keeps NoC instruction bandwidth tiny)."""
+    out: Dict[str, TileSchedule] = {}
+    if isinstance(layer, ConvSpec):
+        k2 = layer.k * layer.k
+        for kpos in range(k2):
+            out[f"k{kpos}"] = compile_conv_tile(layer, kpos, kpos == k2 - 1)
+        out["mtype_last"] = compile_last_row_mtype(layer)
+    else:
+        import math
+
+        n_rows = max(1, math.ceil(layer.c_in / 256))
+        for r in range(n_rows):
+            out[f"r{r}"] = compile_fc_tile(layer, r, n_rows)
+    return out
+
+
+def steady_cycles_per_image(layers: List) -> Tuple[int, Dict[str, int]]:
+    """Pipeline model (paper §IV-B2): with COM all layers stream concurrently;
+    one image occupies the pipe for H_out x W_out cycles of the *bottleneck*
+    (largest-output) layer, plus per-layer fill of one period each.
+    """
+    per_layer: Dict[str, int] = {}
+    fill = 0
+    steady = 0
+    for l in layers:
+        if isinstance(l, ConvSpec):
+            p = conv_period(l)
+            per_layer[l.name] = p
+            fill += p
+            steady = max(steady, l.h_out * l.w_out)
+        else:
+            import math
+
+            n_rows = max(1, math.ceil(l.c_in / 256))
+            per_layer[l.name] = n_rows
+            fill += n_rows + 1
+    return steady + fill, per_layer

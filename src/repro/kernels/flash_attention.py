@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: blockwise (flash) causal attention forward.
+
+Online-softmax attention with the KV loop as the innermost grid dimension;
+running (acc, m, l) live in VMEM scratch across KV steps — scores never
+touch HBM (the attention analogue of COM partial sums staying on the ROFM
+plane). Fully-masked causal blocks are skipped via @pl.when. GQA is handled
+by the wrapper (q heads grouped onto their KV head's stream).
+
+Grid: (BH, Sq/bq, Skv/bkv); block shapes MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, scale, causal, bq, bkv, nkv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal block skip: block fully above the diagonal does nothing
+    run = (not causal) or (ki * bkv <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)          # (bkv, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq,bkv)
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q: (BH, Sq, hd); k/v: (BH, Skv, hd) -> (BH, Sq, hd)."""
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0
+    nkv = Skv // bkv
+    grid = (BH, Sq // bq, nkv)
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, bq=bq, bkv=bkv, nkv=nkv
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention_gqa(q, k, v, *, causal=True, block_q=128, block_kv=128, interpret=False):
+    """GQA wrapper. q: (B, Sq, H, hd); k/v: (B, Skv, KVH, hd)."""
+    B, Sq, H, hd = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, Skv, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, Skv, hd)
+    out = flash_attention(qf, kf, vf, causal=causal, block_q=block_q,
+                          block_kv=block_kv, interpret=interpret)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,56 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the Pallas kernels run compiled; on CPU (this container) they run in
+``interpret=True`` mode, which executes the kernel body in Python for
+correctness validation. ``backend="ref"`` selects the pure-jnp oracle
+(used by models by default — XLA fuses those fine on CPU; the kernels are
+the TPU-target fast path).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.com_matmul import com_matmul as _com_matmul
+from repro.kernels.conv2d_com import conv2d_com as _conv2d_com
+from repro.kernels.flash_attention import flash_attention_gqa as _flash_gqa
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def com_matmul(x, w, *, bias=None, activation=None, residual=None, backend=None):
+    be = backend or ("pallas" if _on_tpu() else "interpret")
+    if be == "ref":
+        return _ref.com_matmul_ref(x, w, bias=bias, activation=activation, residual=residual)
+    return _com_matmul(
+        x, w, bias=bias, activation=activation, residual=residual,
+        interpret=(be == "interpret"),
+    )
+
+
+def flash_attention(q, k, v, *, causal=True, backend=None, block_q=128, block_kv=128):
+    be = backend or ("pallas" if _on_tpu() else "interpret")
+    if be == "ref":
+        B, S, H, hd = q.shape
+        KVH = k.shape[2]
+        G = H // KVH
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, -1, hd)
+        vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, -1, hd)
+        o = _ref.flash_attention_ref(qf, kf, vf, causal=causal)
+        return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return _flash_gqa(q, k, v, causal=causal, block_q=block_q, block_kv=block_kv,
+                      interpret=(be == "interpret"))
+
+
+def conv2d(x, w, *, stride=1, padding=1, activation=None, backend=None):
+    be = backend or ("pallas" if _on_tpu() else "interpret")
+    if be == "ref":
+        return _ref.conv2d_com_ref(x, w, stride=stride, padding=padding, activation=activation)
+    return _conv2d_com(x, w, stride=stride, padding=padding, activation=activation,
+                       interpret=(be == "interpret"))

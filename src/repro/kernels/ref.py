@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _epilogue(y, bias, activation, residual):
+    if bias is not None:
+        y = y + bias
+    if activation == "relu":
+        y = jax.nn.relu(y)
+    elif activation == "silu":
+        y = jax.nn.silu(y)
+    elif activation == "gelu":
+        y = jax.nn.gelu(y)
+    if residual is not None:
+        y = y + residual
+    return y
+
+
+def com_matmul_ref(x, w, *, bias=None, activation=None, residual=None):
+    """(M,K) @ (K,N) + fused ROFM epilogue (Add/Act/Bp), f32 accumulation."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    y = _epilogue(y, None if bias is None else bias.astype(jnp.float32),
+                  activation,
+                  None if residual is None else residual.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q: (BH, Sq, hd); k/v: (BH, Skv, hd). Plain softmax attention."""
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def conv2d_com_ref(x, w, *, stride=1, padding=1, activation=None):
+    """x: (H, W, C); w: (K, K, C, M) — direct convolution oracle."""
+    K = w.shape[0]
+    xp = jnp.pad(x.astype(jnp.float32), ((padding, padding), (padding, padding), (0, 0)))
+    H_out = (x.shape[0] + 2 * padding - K) // stride + 1
+    W_out = (x.shape[1] + 2 * padding - K) // stride + 1
+    out = jnp.zeros((H_out, W_out, w.shape[-1]), jnp.float32)
+    for kr in range(K):
+        for kc in range(K):
+            patch = xp[kr : kr + H_out * stride : stride, kc : kc + W_out * stride : stride, :]
+            out = out + jnp.einsum("hwc,cm->hwm", patch, w[kr, kc].astype(jnp.float32))
+    out = _epilogue(out, None, activation, None)
+    return out.astype(x.dtype)

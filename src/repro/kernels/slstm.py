@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: fused sLSTM recurrence (xLSTM's sequential block).
+
+Why a kernel (EXPERIMENTS.md §Perf hillclimb #3): lowered as a lax.scan,
+every timestep re-reads the recurrent gate weights R (4·H·hd² f32 = 4.2MB
+for xlstm-350m) and round-trips the cell state through HBM — ~22GB of
+traffic per layer per 4k sequence. Fused: R and the (c, n, h, m) state stay
+VMEM-resident across the whole sequence; HBM traffic collapses to one pass
+over the gate pre-activations and the h outputs (~0.6GB, ~35x less).
+
+Layout: the x-side projection gx = x @ Wg + b (a big MXU matmul) stays
+OUTSIDE the kernel; the kernel consumes gx chunks streamed through VMEM.
+
+Grid: (B_blocks, S_chunks) with sequence chunks iterated sequentially
+("arbitrary" semantics) — state scratch persists across chunks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(gx_ref, r_ref, h_out_ref, c_s, n_s, h_s, m_s, *, chunk, nh, hd):
+    sc = pl.program_id(1)
+
+    @pl.when(sc == 0)
+    def _init():
+        c_s[...] = jnp.zeros_like(c_s)
+        n_s[...] = jnp.zeros_like(n_s)
+        h_s[...] = jnp.zeros_like(h_s)
+        m_s[...] = jnp.full_like(m_s, -1e30)
+
+    r = r_ref[...].astype(jnp.float32)  # (4, nh*hd, hd) block-diag recurrent
+
+    def step(t, _):
+        g = gx_ref[0, t].astype(jnp.float32)        # (4, nh*hd)
+        h = h_s[...]                                 # (nh, hd)
+        # recurrent contribution per gate: block-diagonal per head
+        hr = h.reshape(1, nh * hd)
+        # r: (4, nh*hd, hd) — per gate g_i, per head block: (hd, hd)
+        rc = jax.lax.dot_general(
+            jnp.broadcast_to(hr, (4, 1, nh * hd)).reshape(4, nh, 1, hd).astype(jnp.float32),
+            r.reshape(4, nh, hd, hd),
+            (((3,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32,
+        ).reshape(4, nh * hd)
+        g = g + rc
+        gh = g.reshape(4, nh, hd)
+        it, ft, zt, ot = gh[0], gh[1], gh[2], gh[3]
+        logf = -jnp.log1p(jnp.exp(-ft))  # log_sigmoid
+        m_new = jnp.maximum(logf + m_s[...], it)
+        i = jnp.exp(it - m_new)
+        f = jnp.exp(logf + m_s[...] - m_new)
+        c = f * c_s[...] + i * jnp.tanh(zt)
+        n = f * n_s[...] + i
+        h_new = (1.0 / (1.0 + jnp.exp(-ot))) * c / jnp.maximum(n, 1e-6)
+        c_s[...] = c
+        n_s[...] = n
+        h_s[...] = h_new
+        m_s[...] = m_new
+        h_out_ref[0, t] = h_new.reshape(nh * hd).astype(h_out_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+
+def slstm_fused(gx: jnp.ndarray, rg: jnp.ndarray, num_heads: int, *,
+                chunk: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """gx: (B, S, 4, D) gate pre-activations; rg: (4, H, hd, hd).
+
+    Returns h: (B, S, D). Batch rows are independent grid programs; the
+    sequence runs in VMEM-persistent chunks.
+    """
+    B, S, four, D = gx.shape
+    assert four == 4
+    hd = D // num_heads
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    grid = (B, S // chunk)
+    kernel = functools.partial(_kernel, chunk=chunk, nh=num_heads, hd=hd)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 4, D), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((4, D, hd), lambda b, s: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, D), lambda b, s: (b, s, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), gx.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((num_heads, hd), jnp.float32),
+            pltpu.VMEM((num_heads, hd), jnp.float32),
+            pltpu.VMEM((num_heads, hd), jnp.float32),
+            pltpu.VMEM((num_heads, hd), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ) if not interpret else None,
+    )(gx, rg.reshape(4, num_heads * hd, hd))
+
+
+def hbm_traffic_model(B, S, D, num_heads, dtype_bytes=2):
+    """Analytic HBM bytes per layer per sequence: baseline scan vs fused."""
+    hd = D // num_heads
+    r_bytes = 4 * num_heads * hd * hd * 4
+    state_bytes = 4 * num_heads * hd * B * 4
+    baseline = S * (r_bytes + 2 * state_bytes + 4 * D * B * dtype_bytes)
+    fused = B * S * 4 * D * dtype_bytes + B * S * D * dtype_bytes + r_bytes
+    return {"baseline_bytes": baseline, "fused_bytes": fused,
+            "reduction_x": baseline / fused}

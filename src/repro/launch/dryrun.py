@@ -1,0 +1,363 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct stand-ins (no allocation), print memory/cost analysis, and
+derive the roofline terms (launch/hlo_analysis.py).
+
+The two lines above MUST stay the first statements of this module — jax
+locks the device count on first init (see brief). Run one cell per process:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+        --shape train_4k [--multi-pod] [--com] [--out experiments/dryrun]
+
+Exit code 0 iff lower+compile succeeded.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_SHAPES, SHAPES_BY_NAME, get_config
+from repro.launch import mesh as mesh_lib
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.models.transformer import CallConfig, build_model
+from repro.parallel import sharding as sh
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+PyTree = Any
+
+
+def opt_config_for(cfg) -> OptConfig:
+    # 8-bit Adam moments for the largest archs so FSDP state fits one pod;
+    # >200B additionally trains with a bf16 master (+ int8 Adam) — the
+    # established low-precision recipe, and the optimizer-side analogue of
+    # Domino's 8-bit data movement.
+    n = cfg.param_count()
+    return OptConfig(
+        schedule="wsd" if cfg.name.startswith("minicpm") else "cosine",
+        moment_dtype="int8" if n > 50e9 else "fp32",
+        # bf16 master for >=50B: halves FSDP gather bytes (the gather happens
+        # on the stored dtype) — quality recipe: bf16 master + int8 Adam +
+        # f32 accumulation inside the update (§Perf hillclimb #2)
+        param_dtype="bf16" if n > 50e9 else "fp32",
+    )
+
+
+def input_specs(cfg, shape, *, job: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (weak-type-correct,
+    shardable, no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if job == "train":
+        toks = (B, S, cfg.num_codebooks) if cfg.num_codebooks else (B, S)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct(toks, i32),
+            "targets": jax.ShapeDtypeStruct(toks, i32),
+        }
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16
+            )
+        return batch
+    if job == "prefill":
+        toks = (B, S, cfg.num_codebooks) if cfg.num_codebooks else (B, S)
+        out = {"tokens": jax.ShapeDtypeStruct(toks, i32)}
+        if cfg.family == "vlm":
+            out["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16
+            )
+        return out
+    if job == "decode":
+        tok = (B, 1, cfg.num_codebooks) if cfg.num_codebooks else (B, 1)
+        return {"token": jax.ShapeDtypeStruct(tok, i32), "pos": jax.ShapeDtypeStruct((), i32)}
+    raise ValueError(job)
+
+
+def struct_tree(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def with_shardings(struct: PyTree, shardings: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s, sd: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sd), struct, shardings
+    )
+
+
+def model_flops(cfg, shape, job: str) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train, 2·N_active·D inference (global)."""
+    n = cfg.active_param_count()
+    if job == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if job == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one step
+    return 2.0 * n * tokens
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, com: bool = False,
+             seq_shard: bool = False, out_dir: str = "experiments/dryrun",
+             tag: str = "", accum_steps: int = 0, moe_ep: bool = False) -> Dict:
+    cfg = get_config(arch)
+    if moe_ep and cfg.moe is not None:
+        n_dev_total = 512 if multi_pod else 256
+        split = max(1, n_dev_total // cfg.moe.num_experts)
+        while cfg.d_ff % split:
+            split //= 2
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, ep_split=split))
+    shape = SHAPES_BY_NAME[shape_name]
+    job = "train" if shape.kind == "train" else ("prefill" if shape.kind == "prefill" else "decode")
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    prules = sh.param_rules(mesh)
+    arules = sh.act_rules(mesh, job=job, seq_shard=seq_shard)
+    batch_shards = 1
+    for a in (("pod", "data") if multi_pod else ("data",)):
+        batch_shards *= mesh.shape[a]
+
+    cc = CallConfig(
+        dp_size=batch_shards,
+        block_kv=512,
+        remat="block" if job == "train" else "none",
+        shard_fn=sh.make_shard_fn(mesh, arules),
+        compute_dtype=jnp.bfloat16,
+        cache_dtype=jnp.bfloat16,
+    )
+    model = build_model(cfg, cc)
+    result: Dict = dict(
+        arch=arch, shape=shape_name, job=job, multi_pod=multi_pod,
+        mesh=dict(mesh.shape), devices=n_dev, com=com, seq_shard=seq_shard, ok=False,
+    )
+
+    t0 = time.time()
+    try:
+        key = jax.random.PRNGKey(0)
+        param_struct = jax.eval_shape(model.init, key)
+        axes = model.axes_tree()
+        param_shardings = prules.tree_shardings(axes, param_struct)
+        specs = input_specs(cfg, shape, job=job)
+
+        if job == "train":
+            ocfg = opt_config_for(cfg)
+            if ocfg.param_dtype == "bf16":
+                param_struct = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(
+                        s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype
+                    ),
+                    param_struct,
+                )
+            state_struct = {
+                "params": param_struct,
+                "opt": jax.eval_shape(lambda p: init_opt_state(p, ocfg), param_struct),
+                "rng": jax.ShapeDtypeStruct((2,), jnp.uint32),
+            }
+            def _respec(ps, leaf):
+                spec = list(tuple(ps.spec)) + [None] * (len(leaf.shape) - len(ps.spec))
+                spec = spec[: len(leaf.shape)]
+                out = []
+                for dim, axx in zip(leaf.shape, spec):
+                    if axx is None:
+                        out.append(None)
+                        continue
+                    axs = (axx,) if isinstance(axx, str) else tuple(axx)
+                    size = 1
+                    for a in axs:
+                        size *= mesh.shape[a]
+                    out.append(axx if dim % size == 0 else None)
+                return sh.NamedSharding(mesh, sh.P(*out))
+
+            def _moment_shardings(m_struct):
+                def go(ps, ms):
+                    if isinstance(ms, dict) and "q" in ms:
+                        return {k: _respec(ps, v) for k, v in ms.items()}
+                    return _respec(ps, ms)
+
+                return jax.tree.map(go, param_shardings, m_struct)
+
+            opt_shardings = {
+                "step": sh.NamedSharding(mesh, sh.P()),
+                "m": _moment_shardings(state_struct["opt"]["m"]),
+                "v": _moment_shardings(state_struct["opt"]["v"]),
+            }
+            state_shardings = {
+                "params": param_shardings,
+                "opt": opt_shardings,
+                "rng": sh.NamedSharding(mesh, sh.P()),
+            }
+            batch_shardings = sh.batch_shardings(arules, specs)
+            # microbatch accumulation sized so the per-microbatch scan-carry
+            # residuals (num_layers x tokens x d_model x bf16) stay ~<2.5GB
+            # per device — the dominant live-activation term under
+            # remat-scan training.
+            if accum_steps <= 0:
+                dev_batch = max(1, shape.global_batch // batch_shards)
+                dev_tokens = dev_batch * shape.seq_len
+                carry_bytes = cfg.num_layers * dev_tokens * cfg.d_model * 2
+                target = 2.0e9 if cfg.is_moe else 2.5e9
+                need = max(1, int(carry_bytes / target))
+                accum = 1
+                while accum < need and accum < dev_batch:
+                    accum *= 2
+            else:
+                accum = accum_steps
+            result["accum_steps"] = accum
+            step_fn = make_train_step(model, ocfg, accum_steps=accum)
+            jfn = jax.jit(
+                step_fn,
+                in_shardings=(state_shardings, batch_shardings),
+                out_shardings=(state_shardings, None),
+                donate_argnums=(0,),
+            )
+            args = (with_shardings(state_struct, state_shardings), with_shardings(specs, batch_shardings))
+        else:
+            # serving: bf16 params
+            serve_param_struct = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+                param_struct,
+            )
+            cache_struct = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            cache_shardings = sh.cache_shardings(arules, cache_struct)
+            if job == "prefill":
+                def prefill_fn(params, cache, batch):
+                    return model.prefill(
+                        params, batch["tokens"], cache,
+                        image_embeds=batch.get("image_embeds"),
+                    )
+
+                batch_shardings = sh.batch_shardings(arules, specs)
+                jfn = jax.jit(
+                    prefill_fn,
+                    in_shardings=(param_shardings, cache_shardings, batch_shardings),
+                    out_shardings=(None, cache_shardings),
+                    donate_argnums=(1,),
+                )
+                args = (
+                    with_shardings(serve_param_struct, param_shardings),
+                    with_shardings(cache_struct, cache_shardings),
+                    with_shardings(specs, batch_shardings),
+                )
+            else:
+                def decode_fn(params, token, cache, pos):
+                    return model.decode_step(params, token, cache, pos)
+
+                tok_shard = sh.batch_shardings(arules, {"token": specs["token"]})["token"]
+                jfn = jax.jit(
+                    decode_fn,
+                    in_shardings=(param_shardings, tok_shard, cache_shardings, sh.NamedSharding(mesh, sh.P())),
+                    out_shardings=(None, cache_shardings),
+                    donate_argnums=(2,),
+                )
+                args = (
+                    with_shardings(serve_param_struct, param_shardings),
+                    with_shardings({"token": specs["token"]}, {"token": tok_shard})["token"],
+                    with_shardings(cache_struct, cache_shardings),
+                    specs["pos"],
+                )
+
+        with mesh:
+            lowered = jfn.lower(*args)
+            result["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            result["compile_s"] = round(time.time() - t1, 2)
+
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            result["memory_analysis"] = {
+                k: getattr(ma, k)
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes")
+            }
+            live = ma.argument_size_in_bytes + ma.temp_size_in_bytes + max(
+                ma.output_size_in_bytes - ma.alias_size_in_bytes, 0)
+            result["bytes_per_device"] = int(live)
+            result["fits_16gb"] = bool(live < 16e9)
+        ca = compiled.cost_analysis()
+        if ca:
+            result["cost_analysis"] = {
+                k: float(ca[k]) for k in ("flops", "bytes accessed", "transcendentals") if k in ca
+            }
+        txt = compiled.as_text()
+        result["hlo_bytes"] = len(txt)
+        hlo = analyze_hlo(txt, num_devices=n_dev)
+        result["hlo_analysis"] = {k: v for k, v in hlo.items()}
+
+        # ---- roofline terms (single report; §Roofline uses single-pod) ----
+        flops_dev = hlo["dot_flops_per_device"]
+        hbm_dev = hlo["hbm_bytes_per_device"]
+        coll_dev = hlo["collective_bytes_total"]
+        mf = model_flops(cfg, shape, job)
+        compute_s = flops_dev / mesh_lib.PEAK_FLOPS_BF16
+        memory_s = hbm_dev / mesh_lib.HBM_BW
+        coll_s = coll_dev / mesh_lib.ICI_BW
+        dominant = max(
+            (("compute", compute_s), ("memory", memory_s), ("collective", coll_s)),
+            key=lambda kv: kv[1],
+        )[0]
+        result["roofline"] = {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": coll_s,
+            "dominant": dominant,
+            "model_flops_global": mf,
+            "model_flops_per_device": mf / n_dev,
+            "useful_flops_ratio": (mf / n_dev) / flops_dev if flops_dev else None,
+            "step_time_bound_s": max(compute_s, memory_s, coll_s),
+            "mfu_bound": (mf / n_dev / mesh_lib.PEAK_FLOPS_BF16)
+            / max(compute_s, memory_s, coll_s, 1e-30),
+        }
+        result["ok"] = True
+        print(f"[dryrun] {arch} {shape_name} mp={multi_pod} OK "
+              f"lower={result['lower_s']}s compile={result['compile_s']}s "
+              f"mem/dev={result.get('bytes_per_device', 0)/1e9:.2f}GB "
+              f"dominant={dominant}")
+        print("memory_analysis:", result.get("memory_analysis"))
+        print("cost_analysis:", result.get("cost_analysis"))
+    except Exception as e:  # noqa: BLE001 — record, report, non-zero exit
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {arch} {shape_name} mp={multi_pod} FAIL: {result['error'][:300]}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    mp = "2pod" if multi_pod else "1pod"
+    suffix = f"_{tag}" if tag else ("_com" if com else "")
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mp}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, default=str)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=[s.name for s in ALL_SHAPES])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--com", action="store_true", help="enable COM collective schedule")
+    ap.add_argument("--seq-shard", action="store_true", help="sequence-parallel activations")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--accum", type=int, default=0, help="microbatch accumulation steps (0=auto)")
+    ap.add_argument("--moe-ep", action="store_true", help="token-routing expert parallelism")
+    args = ap.parse_args()
+    res = run_cell(
+        args.arch, args.shape, multi_pod=args.multi_pod, com=args.com,
+        seq_shard=args.seq_shard, out_dir=args.out, tag=args.tag,
+        accum_steps=args.accum, moe_ep=args.moe_ep,
+    )
+    raise SystemExit(0 if res["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

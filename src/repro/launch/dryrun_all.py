@@ -1,0 +1,78 @@
+"""Dry-run orchestrator: every (arch x shape x mesh) cell as an isolated
+subprocess (one bad cell can't take down the sweep; each process gets fresh
+XLA state). Skips cells whose JSON already reports ok unless --force.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_all [--force] [--only-failed]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import ARCHS, get_config
+
+
+def cells():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in cfg.shapes():
+            for mp in (False, True):
+                yield arch, shape.name, mp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--arch", default=None, help="restrict to one arch")
+    args = ap.parse_args()
+
+    todo = list(cells())
+    if args.arch:
+        todo = [c for c in todo if c[0] == args.arch]
+    t_start = time.time()
+    results = []
+    for i, (arch, shape, mp) in enumerate(todo):
+        tag = "2pod" if mp else "1pod"
+        path = os.path.join(args.out, f"{arch}__{shape}__{tag}.json")
+        if not args.force and os.path.exists(path):
+            try:
+                if json.load(open(path)).get("ok"):
+                    results.append((arch, shape, tag, "cached"))
+                    continue
+            except Exception:
+                pass
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--out", args.out]
+        if mp:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        try:
+            proc = subprocess.run(cmd, capture_output=True, text=True, timeout=args.timeout)
+            ok = proc.returncode == 0
+            if not ok:
+                sys.stderr.write(proc.stdout[-2000:] + proc.stderr[-2000:])
+        except subprocess.TimeoutExpired:
+            ok = False
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "ok": False,
+                           "error": f"timeout>{args.timeout}s"}, f)
+        dt = time.time() - t0
+        results.append((arch, shape, tag, "ok" if ok else "FAIL"))
+        print(f"[{i+1}/{len(todo)}] {arch:28s} {shape:12s} {tag} "
+              f"{'ok' if ok else 'FAIL':4s} {dt:6.1f}s  (elapsed {time.time()-t_start:6.0f}s)",
+              flush=True)
+
+    fails = [r for r in results if r[3] == "FAIL"]
+    print(f"\n{len(results) - len(fails)}/{len(results)} cells ok; {len(fails)} failed")
+    for r in fails:
+        print("  FAIL:", r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,251 @@
+"""Post-compile HLO accounting for the roofline analysis.
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE, which under-counts
+scan-over-layers programs by ~num_layers x. This module re-parses the
+optimized HLO text, attributes dot-FLOPs / collective bytes / HBM traffic to
+their computations, and multiplies through ``known_trip_count`` of every
+enclosing while loop (nested loops compose multiplicatively).
+
+Per-device wire bytes per collective (ring formulas, group size n):
+  all-gather:          (n-1)/n * result_bytes
+  reduce-scatter:      (n-1)/n * operand_bytes
+  all-reduce:          2(n-1)/n * operand_bytes
+  all-to-all:          (n-1)/n * operand_bytes
+  collective-permute:  operand_bytes
+
+HBM traffic proxy: for every non-trivial instruction at fusion granularity
+(fusions are single instructions in optimized HLO, so their operands/results
+are the actual memory-boundary tensors), bytes = result + operand bytes.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->\s+.*\{")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SKIP_OPS = (
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+)
+
+
+def _shape_bytes(typestr: str) -> int:
+    """bytes of possibly-tuple type string like '(s32[], f32[32,64]{1,0})'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(typestr):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.instrs: List[Tuple[str, str]] = []  # (result_name, rhs text)
+        self.result_bytes: Dict[str, int] = {}
+        self.result_type: Dict[str, str] = {}
+
+
+def parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        cur.instrs.append((name, rhs))
+        # result type = prefix of rhs up to the op name: "f32[32,64]{1,0} dot(...)"
+        tm = re.match(r"^(\([^)]*\)|[\w\[\],{}]+)\s", rhs)
+        t = tm.group(1) if tm else ""
+        cur.result_type[name] = t
+        cur.result_bytes[name] = _shape_bytes(t)
+    return comps
+
+
+def _group_size(rhs: str, default: int) -> int:
+    m = _GROUPS_RE.search(rhs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_V1_RE.search(rhs)
+    if m:
+        first = m.group(1).split("},")[0].strip("{}")
+        return len([x for x in first.split(",") if x.strip() != ""])
+    return default
+
+
+def analyze_hlo(text: str, *, num_devices: int) -> Dict:
+    comps = parse_computations(text)
+    entry_name = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry_name = m.group(1)
+    if entry_name is None or entry_name not in comps:
+        # fallback: computation named main-ish or the last one
+        cand = [n for n in comps if "main" in n]
+        entry_name = cand[0] if cand else (list(comps)[-1] if comps else None)
+
+    # ---- per-computation local stats + call edges ----
+    local = {}
+    for cname, comp in comps.items():
+        dot_flops = 0
+        coll = defaultdict(float)
+        coll_raw = defaultdict(float)
+        hbm = 0
+        calls: List[Tuple[str, int]] = []  # (callee, multiplier)
+        for name, rhs in comp.instrs:
+            opm = re.search(r"\b([a-z][\w\-]*)\(", rhs)
+            op = opm.group(1) if opm else ""
+            if op.endswith("-done"):
+                continue  # async pair: accounted at -start
+            if op.endswith("-start"):
+                op = op[: -len("-start")]
+            res_bytes = comp.result_bytes.get(name, 0)
+            # operands: %refs inside the first (...) — look them up locally
+            args_m = re.search(rf"{re.escape(op)}\((.*?)\)(?:,|$)", rhs) if op else None
+            operand_names = _OPERAND_RE.findall(args_m.group(1)) if args_m else []
+            operand_bytes = sum(comp.result_bytes.get(o, 0) for o in operand_names)
+
+            if op == "dynamic-slice" or (op == "fusion" and "dynamic-slice" in name and "update" not in name):
+                # reads just the slice (result), not the sliced buffer
+                hbm += 2 * res_bytes
+                continue
+            if op == "dynamic-update-slice" or (op == "fusion" and ("dynamic-update-slice" in name or "dynamic_update_slice" in name)):
+                # in-place read-modify-write of the update region: the full
+                # buffer operand aliases the result (scan carries/ys) — only
+                # the small operands (the update slice) move
+                small = sum(
+                    b for o in operand_names
+                    if (b := comp.result_bytes.get(o, 0)) < res_bytes
+                )
+                hbm += 2 * small
+                continue
+            if op in COLLECTIVES:
+                n = _group_size(rhs, num_devices)
+                frac = (n - 1) / max(n, 1)
+                if op == "all-gather":
+                    coll[op] += frac * res_bytes
+                elif op == "reduce-scatter":
+                    coll[op] += frac * operand_bytes
+                elif op == "all-reduce":
+                    coll[op] += 2 * frac * operand_bytes
+                elif op == "all-to-all":
+                    coll[op] += frac * operand_bytes
+                elif op == "collective-permute":
+                    coll[op] += operand_bytes
+                coll_raw[op] += operand_bytes
+                hbm += res_bytes + operand_bytes
+            elif op == "dot":
+                # contracted dims from lhs shape + lhs_contracting_dims
+                lhs = operand_names[0] if operand_names else None
+                lhs_t = comp.result_type.get(lhs, "")
+                sm = _SHAPE_RE.search(lhs_t)
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                k = 1
+                if sm and cdims and cdims.group(1):
+                    dims = [int(x) for x in sm.group(2).split(",")] if sm.group(2) else []
+                    for ci in cdims.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(dims):
+                            k *= dims[ci]
+                # dot result elements:
+                rt = comp.result_type.get(name, "")
+                rm = _SHAPE_RE.search(rt)
+                nelem = 1
+                if rm and rm.group(2):
+                    for d in rm.group(2).split(","):
+                        nelem *= int(d)
+                dot_flops += 2 * nelem * k
+                hbm += res_bytes + operand_bytes
+            elif op == "while":
+                bm = re.search(r"body=%([\w.\-]+)", rhs)
+                cm = re.search(r"condition=%([\w.\-]+)", rhs)
+                tm = _TRIP_RE.search(rhs)
+                trip = int(tm.group(1)) if tm else 1
+                if bm:
+                    calls.append((bm.group(1), trip))
+                if cm:
+                    calls.append((cm.group(1), trip + 1))
+            elif op in ("call", "map", "reduce", "sort", "scatter", "select-and-scatter", "conditional"):
+                # traverse real call edges (fusion internals are NOT traversed:
+                # the fusion op itself already accounts the memory boundary)
+                for cal in re.finditer(r"(?:to_apply|calls)=%([\w.\-]+)", rhs):
+                    calls.append((cal.group(1), 1))
+                hbm += res_bytes + operand_bytes
+            elif op and op not in _SKIP_OPS:
+                hbm += res_bytes + operand_bytes
+        local[cname] = dict(dot_flops=dot_flops, coll=coll, coll_raw=coll_raw, hbm=hbm, calls=calls)
+
+    # which computations are fusion-internals? (never called via while/call)
+    # we simply never traverse into them (fusion edges aren't added to calls).
+
+    # ---- propagate multipliers from entry ----
+    mult: Dict[str, float] = defaultdict(float)
+
+    def visit(cname: str, m: float, depth=0):
+        if cname not in local or depth > 50:
+            return
+        mult[cname] += m
+        for callee, k in local[cname]["calls"]:
+            visit(callee, m * k, depth + 1)
+
+    if entry_name:
+        visit(entry_name, 1.0)
+
+    total_flops = 0.0
+    total_hbm = 0.0
+    coll_bytes = defaultdict(float)
+    coll_raw_bytes = defaultdict(float)
+    for cname, m in mult.items():
+        st = local[cname]
+        total_flops += m * st["dot_flops"]
+        total_hbm += m * st["hbm"]
+        for k, v in st["coll"].items():
+            coll_bytes[k] += m * v
+        for k, v in st["coll_raw"].items():
+            coll_raw_bytes[k] += m * v
+
+    return {
+        "entry": entry_name,
+        "dot_flops_per_device": total_flops,
+        "hbm_bytes_per_device": total_hbm,
+        "collective_bytes_per_device": dict(coll_bytes),
+        "collective_bytes_total": float(sum(coll_bytes.values())),
+        "collective_operand_bytes_raw": dict(coll_raw_bytes),
+        "num_computations": len(comps),
+        "num_whiles": sum(1 for c in local.values() for _ in c["calls"]),
+    }

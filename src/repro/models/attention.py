@@ -1,0 +1,321 @@
+"""Attention: GQA projections, blockwise (flash) causal attention, decode
+attention against a (possibly sequence-sharded) KV cache, cross-attention.
+
+The blockwise path is the memory-safe default used by train/prefill lowering
+(scores never materialized at (S, S)); ``kernels/flash_attention.py`` is the
+Pallas TPU-target twin validated against ``naive_attention`` here.
+
+Decode attention is written as an explicit max-subtracted softmax chain of
+einsums so that when the KV cache's *sequence* axis is sharded over the
+``model`` mesh axis, GSPMD turns the reductions into partial-reduce +
+all-reduce — i.e. flash-decoding-style LSE combining, the attention analogue
+of the paper's partial-sum accumulation on the move (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+
+Params = Dict[str, Any]
+
+
+def init_attention(key, d: int, num_heads: int, num_kv_heads: int, *, qkv_bias: bool = False) -> Tuple[Params, Params]:
+    hd = d // num_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, num_heads * hd),
+        "wk": dense_init(ks[1], d, num_kv_heads * hd),
+        "wv": dense_init(ks[2], d, num_kv_heads * hd),
+        "wo": dense_init(ks[3], num_heads * hd, d),
+    }
+    ax = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv"),
+        "wv": ("embed", "kv"),
+        "wo": ("heads", "embed"),
+    }
+    if qkv_bias:
+        p.update(
+            bq=jnp.zeros((num_heads * hd,), jnp.float32),
+            bk=jnp.zeros((num_kv_heads * hd,), jnp.float32),
+            bv=jnp.zeros((num_kv_heads * hd,), jnp.float32),
+        )
+        ax.update(bq=("heads",), bk=("kv",), bv=("kv",))
+    return p, ax
+
+
+def qkv_project(params: Params, x: jnp.ndarray, num_heads: int, num_kv_heads: int):
+    d = x.shape[-1]
+    hd = d // num_heads
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, num_heads, hd)
+    k = k.reshape(B, S, num_kv_heads, hd)
+    v = v.reshape(B, S, num_kv_heads, hd)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Reference full attention (oracle; only for small shapes/tests)
+# ---------------------------------------------------------------------------
+
+
+def naive_attention(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q: (B,Sq,H,hd) k/v: (B,Skv,KVH,hd); returns (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, hd).astype(jnp.float32)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, kf) / math.sqrt(hd)
+    if causal:
+        Skv = k.shape[1]
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, vf)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash) attention — lax.scan over KV blocks, online softmax.
+#
+# custom_vjp: the backward recomputes block scores instead of letting scan-AD
+# stack per-block residuals (which costs O(S·S_blk·H) f32 — 9.7GB/device for
+# smollm train_4k before this fix; saved residuals are just (out, lse)).
+# ---------------------------------------------------------------------------
+
+
+def _blocks(x, nb, blk):
+    B = x.shape[0]
+    return x.reshape(B, nb, blk, *x.shape[2:]).swapaxes(0, 1)
+
+
+def _flash_fwd_impl(q, k, v, causal: bool, block_kv: int):
+    B, Sq, H, hd = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    blk = min(block_kv, Skv)
+    nb = (Skv + blk - 1) // blk
+    pad = nb * blk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qg = (q.reshape(B, Sq, KVH, G, hd) / math.sqrt(hd)).astype(jnp.float32)
+    kb = _blocks(k, nb, blk).astype(jnp.float32)
+    vb = _blocks(v, nb, blk).astype(jnp.float32)
+    q_pos = jnp.arange(Sq)
+
+    def step(carry, xs):
+        acc, m, l = carry
+        blk_idx, k_blk, v_blk = xs
+        kv_pos = blk_idx * blk + jnp.arange(blk)
+        s = jnp.einsum("bqkgh,bskh->bqkgs", qg, k_blk)
+        mask = kv_pos[None, :] < Skv
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.maximum(m_new, -1e30)
+        p = jnp.exp(s - m_safe[..., None])
+        alpha = jnp.exp(jnp.maximum(m, -1e30) - m_safe)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bqkgs,bskh->bqkgh", p, v_blk)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, Sq, KVH, G, hd), jnp.float32)
+    m0 = jnp.full((B, Sq, KVH, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KVH, G), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (jnp.arange(nb), kb, vb))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    lse = jnp.maximum(m, -1e30) + jnp.log(l)  # (B,Sq,KVH,G)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype), lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash_attention(q, k, v, causal: bool, block_kv: int):
+    return _flash_fwd_impl(q, k, v, causal, block_kv)[0]
+
+
+def _flash_vjp_fwd(q, k, v, causal, block_kv):
+    out, lse = _flash_fwd_impl(q, k, v, causal, block_kv)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, block_kv, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, hd = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    blk = min(block_kv, Skv)
+    nb = (Skv + blk - 1) // blk
+    pad = nb * blk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q.reshape(B, Sq, KVH, G, hd) * scale).astype(jnp.float32)
+    do = dout.reshape(B, Sq, KVH, G, hd).astype(jnp.float32)
+    og = out.reshape(B, Sq, KVH, G, hd).astype(jnp.float32)
+    delta = jnp.sum(do * og, axis=-1)  # (B,Sq,KVH,G)
+    kb = _blocks(k, nb, blk).astype(jnp.float32)
+    vb = _blocks(v, nb, blk).astype(jnp.float32)
+    q_pos = jnp.arange(Sq)
+
+    def step(dq, xs):
+        blk_idx, k_blk, v_blk = xs
+        kv_pos = blk_idx * blk + jnp.arange(blk)
+        s = jnp.einsum("bqkgh,bskh->bqkgs", qg, k_blk)
+        mask = kv_pos[None, :] < Skv
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        p = jnp.exp(s - lse[..., None])  # exact softmax weights
+        dv_blk = jnp.einsum("bqkgs,bqkgh->bskh", p, do)
+        dp = jnp.einsum("bqkgh,bskh->bqkgs", do, v_blk)
+        ds = p * (dp - delta[..., None])
+        dq = dq + jnp.einsum("bqkgs,bskh->bqkgh", ds, k_blk)
+        dk_blk = jnp.einsum("bqkgs,bqkgh->bskh", ds, qg)
+        return dq, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, Sq, KVH, G, hd), jnp.float32)
+    dq, (dkb, dvb) = jax.lax.scan(step, dq0, (jnp.arange(nb), kb, vb))
+    dq = (dq * scale).reshape(B, Sq, H, hd).astype(q.dtype)
+    dk = dkb.swapaxes(0, 1).reshape(B, nb * blk, KVH, hd)[:, :Skv].astype(k.dtype)
+    dv = dvb.swapaxes(0, 1).reshape(B, nb * blk, KVH, hd)[:, :Skv].astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_kv: int = 512) -> jnp.ndarray:
+    """Numerically-stable blockwise attention; O(S·block) memory fwd AND bwd.
+
+    q: (B,Sq,H,hd), k/v: (B,Skv,KVH,hd). Sq == Skv assumed when causal.
+    """
+    return _flash_attention(q, k, v, causal, block_kv)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token vs KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, k_cache, v_cache, pos: jnp.ndarray) -> jnp.ndarray:
+    """q: (B,1,H,hd); caches: (B,S,KVH,hd); pos: () current length.
+
+    Written so reductions over the cache's S axis survive sequence sharding:
+    partial max / partial sum per shard + cross-shard combine == flash
+    decoding / COM-style accumulation, inserted automatically by GSPMD.
+    """
+    B, _, H, hd = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    qg = (q.reshape(B, KVH, G, hd) / math.sqrt(hd)).astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, kf)
+    valid = jnp.arange(S)[None, :] <= pos  # (1, S) positions filled so far
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)          # partial-max -> all-reduce
+    p = jnp.exp(s - jax.lax.stop_gradient(m))
+    l = jnp.sum(p, axis=-1, keepdims=True)           # partial-sum -> all-reduce
+    out = jnp.einsum("bkgs,bskh->bkgh", p / l, vf)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (VLM): queries from text stream, KV from image embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attention(key, d: int, num_heads: int, num_kv_heads: int) -> Tuple[Params, Params]:
+    return init_attention(key, d, num_heads, num_kv_heads)
+
+
+def cross_kv(params: Params, ctx: jnp.ndarray, num_heads: int, num_kv_heads: int, d: int):
+    """Project image embeddings to cached cross K/V. ctx: (B,T,D)."""
+    hd = d // num_heads
+    B, T = ctx.shape[:2]
+    k = jnp.einsum("btd,dh->bth", ctx, params["wk"].astype(ctx.dtype)).reshape(B, T, num_kv_heads, hd)
+    v = jnp.einsum("btd,dh->bth", ctx, params["wv"].astype(ctx.dtype)).reshape(B, T, num_kv_heads, hd)
+    return k, v
+
+
+def cross_attention_kv(params: Params, x: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, num_heads: int, *, block_kv: int = 512) -> jnp.ndarray:
+    """Cross attention against precomputed (cached) K/V."""
+    d = x.shape[-1]
+    hd = d // num_heads
+    B, S = x.shape[:2]
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype)).reshape(B, S, num_heads, hd)
+    out = flash_attention(q, k.astype(x.dtype), v.astype(x.dtype), causal=False, block_kv=block_kv)
+    return jnp.einsum("bsh,hd->bsd", out.reshape(B, S, num_heads * hd), params["wo"].astype(x.dtype))
+
+
+def cross_attention(params: Params, x: jnp.ndarray, ctx: jnp.ndarray, num_heads: int, num_kv_heads: int, *, block_kv: int = 512) -> jnp.ndarray:
+    """x: (B,S,D) text stream; ctx: (B,T,D) precomputed image embeddings."""
+    k, v = cross_kv(params, ctx, num_heads, num_kv_heads, x.shape[-1])
+    return cross_attention_kv(params, x, k, v, num_heads, block_kv=block_kv)
+
+
+def attention_block(
+    params: Params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    num_heads: int,
+    num_kv_heads: int,
+    *,
+    rope_theta: float,
+    rope_fraction: float = 1.0,
+    causal: bool = True,
+    block_kv: int = 512,
+    kv_cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    """Self-attention incl. QKV/out projections.
+
+    Modes:
+      - train/prefill (kv_cache None): flash attention over the sequence. If
+        a cache should be *filled* (prefill), pass kv_cache=(k0, v0) zeros
+        with cache_pos=None -> returns updated cache.
+      - decode (kv_cache given + cache_pos given): one-token step.
+    """
+    B, S, d = x.shape
+    q, k, v = qkv_project(params, x, num_heads, num_kv_heads)
+    q = apply_rope(q, positions, rope_theta, rope_fraction)
+    k = apply_rope(k, positions, rope_theta, rope_fraction)
+
+    new_cache = None
+    if kv_cache is not None and cache_pos is not None:
+        # decode: append this step's k/v at cache_pos
+        k_cache, v_cache = kv_cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), cache_pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), cache_pos, axis=1)
+        out = decode_attention(q, k_cache, v_cache, cache_pos)
+        new_cache = (k_cache, v_cache)
+    else:
+        out = flash_attention(q, k, v, causal=causal, block_kv=block_kv)
+        if kv_cache is not None:  # prefill: write the computed k/v into cache
+            k_cache, v_cache = kv_cache
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), 0, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), 0, axis=1)
+            new_cache = (k_cache, v_cache)
+
+    hd = d // num_heads
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, num_heads * hd), params["wo"].astype(x.dtype))
+    return y, new_cache

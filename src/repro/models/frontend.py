@@ -1,0 +1,31 @@
+"""Modality frontend STUBS (per assignment: [vlm]/[audio] entries specify the
+transformer backbone only; ``input_specs()`` provides precomputed frame/patch
+embeddings).
+
+These helpers define the *shapes* of the stub inputs and a deterministic
+synthetic generator for smoke tests/examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def image_embed_shape(cfg, batch: int):
+    """Precomputed vision-tower patch embeddings for cross-attention."""
+    return (batch, cfg.num_image_tokens, cfg.d_model)
+
+
+def synth_image_embeds(key, cfg, batch: int, dtype=jnp.bfloat16):
+    return jax.random.normal(key, image_embed_shape(cfg, batch), dtype) * 0.02
+
+
+def audio_token_shape(cfg, batch: int, seq: int):
+    """EnCodec RVQ token grid: (B, S, num_codebooks)."""
+    return (batch, seq, cfg.num_codebooks)
+
+
+def synth_tokens(key, cfg, batch: int, seq: int):
+    if cfg.num_codebooks:
+        return jax.random.randint(key, audio_token_shape(cfg, batch, seq), 0, cfg.vocab_size)
+    return jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)

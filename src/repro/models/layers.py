@@ -1,0 +1,153 @@
+"""Foundational layers: norms, RoPE, linear/embedding init, SwiGLU MLP.
+
+Pure functional: ``init_*`` builds param pytrees (leaves: jnp arrays), apply
+functions take ``(params, x)``. Every init also returns a parallel tree of
+*logical axis names* consumed by ``repro.parallel.sharding`` — this is how
+FSDP/TP/EP placement stays declarative.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+# Logical axis vocabulary (mapped to mesh axes in parallel/sharding.py):
+#   "embed"   - d_model dim            -> fsdp ("data")
+#   "mlp"     - ffn hidden dim         -> tensor ("model")
+#   "heads"   - attention heads dim    -> tensor ("model")
+#   "kv"      - kv head dim            -> None (small) / tensor
+#   "vocab"   - vocabulary dim         -> tensor ("model")
+#   "experts" - MoE expert dim         -> tensor ("model")
+#   "layers"  - stacked scan dim       -> None
+#   None      - replicated
+
+
+def dense_init(key, in_dim: int, out_dim: int, *, dtype=jnp.float32) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(in_dim)
+    return jax.random.normal(key, (in_dim, out_dim), dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> Tuple[Params, Params]:
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": ("embed",)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(dt)
+
+
+def init_layernorm(d: int) -> Tuple[Params, Params]:
+    return (
+        {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)},
+        {"scale": ("embed",), "bias": ("embed",)},
+    )
+
+
+def layernorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(dt)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return init_rmsnorm, rmsnorm
+    if kind == "layernorm":
+        return init_layernorm, layernorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (partial-fraction support for phi4)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float, fraction: float) -> jnp.ndarray:
+    rot_dim = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv  # (rot_dim/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float, fraction: float = 1.0) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta, fraction)
+    rot_dim = inv.shape[0] * 2
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([y.astype(x.dtype), x_pass], axis=-1) if rot_dim < head_dim else y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, f: int, activation: str) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 3)
+    if activation == "silu":  # SwiGLU: gate+up+down
+        p = {
+            "wi_gate": dense_init(ks[0], d, f),
+            "wi_up": dense_init(ks[1], d, f),
+            "wo": dense_init(ks[2], f, d),
+        }
+        ax = {
+            "wi_gate": ("embed", "mlp"),
+            "wi_up": ("embed", "mlp"),
+            "wo": ("mlp", "embed"),
+        }
+    else:  # gelu 2-matrix
+        p = {"wi": dense_init(ks[0], d, f), "wo": dense_init(ks[1], f, d)}
+        ax = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    return p, ax
+
+
+def mlp(params: Params, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "silu":
+        g = jnp.einsum("...d,df->...f", x, params["wi_gate"].astype(x.dtype))
+        u = jnp.einsum("...d,df->...f", x, params["wi_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(
+            jnp.einsum("...d,df->...f", x, params["wi"].astype(x.dtype))
+        )
+    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int) -> Tuple[Params, Params]:
+    p = {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+    return p, {"table": ("vocab", "embed")}
+
+
+def embed(params: Params, tokens: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...d,vd->...v", x, params["table"].astype(x.dtype))

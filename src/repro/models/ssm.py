@@ -1,0 +1,216 @@
+"""Mamba2 / SSD block (chunked state-space dual form) — used by zamba2.
+
+Faithful minimal Mamba2: per-head scalar decay A, softplus(dt), depthwise
+causal conv over (x,B,C), SSD chunked algorithm (intra-chunk quadratic +
+inter-chunk state scan) so train/prefill is O(S·Q) not O(S²), and decode is
+an O(1) recurrent step. ngroups=1 (B/C shared across heads).
+
+State layout (decode cache):
+  conv_state: (B, W-1, conv_channels)
+  ssd_state : (B, H, N, P)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def _blocks(x, nb, blk):
+    """(B, S, ...) -> (nb, B, blk, ...) chunk view for scan xs."""
+    B = x.shape[0]
+    return x.reshape(B, nb, blk, *x.shape[2:]).swapaxes(0, 1)
+
+
+def init_mamba2(key, d: int, *, expand: int, head_dim: int, state_dim: int, conv_width: int) -> Tuple[Params, Params]:
+    inner = expand * d
+    nheads = inner // head_dim
+    conv_ch = inner + 2 * state_dim  # x + B + C
+    ks = jax.random.split(key, 5)
+    p = {
+        # fused input projection: [z(inner), x(inner), B(N), C(N), dt(H)]
+        "in_proj": dense_init(ks[0], d, 2 * inner + 2 * state_dim + nheads),
+        "conv_w": jax.random.normal(ks[1], (conv_width, conv_ch), jnp.float32) * (1.0 / math.sqrt(conv_width)),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm_scale": jnp.ones((inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], inner, d),
+    }
+    ax = {
+        "in_proj": ("embed", "mlp"),
+        "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm_scale": ("mlp",),
+        "out_proj": ("mlp", "embed"),
+    }
+    return p, ax
+
+
+def _split_proj(proj, inner, state_dim, nheads):
+    z = proj[..., :inner]
+    xbc = proj[..., inner : 2 * inner + 2 * state_dim]
+    dt = proj[..., 2 * inner + 2 * state_dim :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: xbc (B,S,C), w (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, *, chunk: int, init_state=None):
+    """SSD forward.
+
+    x:  (B, S, H, P) inputs per head
+    dt: (B, S, H)    positive step sizes
+    A:  (H,)         negative decay rates
+    Bm: (B, S, N)    input projections (ngroups=1)
+    Cm: (B, S, N)    output projections
+    Returns y (B,S,H,P), final_state (B,H,N,P).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = (S + Q - 1) // Q
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    # chunked xs for a single scan over chunks: per-step working set is
+    # O(B·Q·Q·H), never materialized for all chunks at once (that costs
+    # ~37GB/device for zamba2 train_4k); the step is checkpointed so scan-AD
+    # saves only the carried state per chunk.
+    xc = _blocks(x, nc, Q).astype(jnp.float32)
+    dtc = _blocks(dt, nc, Q).astype(jnp.float32)
+    Bc = _blocks(Bm, nc, Q).astype(jnp.float32)
+    Cc = _blocks(Cm, nc, Q).astype(jnp.float32)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def step(h, xs):
+        xq, dtq, Bq, Cq = xs  # (B,Q,H,P) (B,Q,H) (B,Q,N) (B,Q,N)
+        la = dtq * A  # (B,Q,H) negative log-decay
+        La = jnp.cumsum(la, axis=1)
+        seg = La[:, :, None, :] - La[:, None, :, :]  # (B,t,s,H)
+        # mask in LOG space before exp: for s>t seg is large-positive and
+        # exp would overflow -> NaN gradients through the where
+        seg = jnp.where(tri[None, :, :, None], seg, -1e30)
+        decay = jnp.exp(seg)
+        cb = jnp.einsum("btn,bsn->bts", Cq, Bq)
+        w = cb[..., None] * decay * dtq[:, None, :, :]
+        y = jnp.einsum("btsh,bshp->bthp", w, xq)
+        # inter-chunk: contribution of entering state h
+        y = y + jnp.einsum("btn,bth,bhnp->bthp", Cq, jnp.exp(La), h)
+        y = y + xq * D[None, None, :, None]
+        # state update to chunk end
+        dec_end = jnp.exp(La[:, -1, None, :] - La)  # (B,Q,H)
+        sb = jnp.einsum("bsh,bsn,bshp->bhnp", dec_end * dtq, Bq, xq)
+        h_new = h * jnp.exp(La[:, -1])[:, :, None, None] + sb
+        return h_new, y
+
+    h0 = (
+        jnp.zeros((Bsz, H, N, P), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    step_ckpt = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    h_final, ys = jax.lax.scan(step_ckpt, h0, (xc, dtc, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(Bsz, nc * Q, H, P)
+    return y[:, :S].astype(x.dtype), h_final
+
+
+def mamba2_forward(params: Params, x: jnp.ndarray, cfg, *, return_state: bool = False):
+    """Full-sequence forward (train/prefill). x: (B,S,D).
+
+    With ``return_state`` also returns the decode cache: rolling raw conv
+    inputs (last W-1 xBC columns) + final SSD state.
+    """
+    inner = cfg.ssm.expand * x.shape[-1]
+    nheads = inner // cfg.ssm.head_dim
+    N = cfg.ssm.state_dim
+    proj = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(x.dtype))
+    z, xbc_raw, dt = _split_proj(proj, inner, N, nheads)
+    xbc = _causal_conv(xbc_raw, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype))
+    xs = xbc[..., :inner]
+    Bm = xbc[..., inner : inner + N]
+    Cm = xbc[..., inner + N :]
+    B, S = x.shape[:2]
+    xh = xs.reshape(B, S, nheads, cfg.ssm.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, h_final = ssd_chunked(xh, dt, A, Bm, Cm, params["D"], chunk=cfg.ssm.chunk)
+    y = y.reshape(B, S, inner)
+    # gated RMS norm (Mamba2 style)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5) * params["norm_scale"]).astype(x.dtype)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(x.dtype))
+    if not return_state:
+        return out
+    W = cfg.ssm.conv_width
+    tail = xbc_raw[:, -(W - 1):, :]
+    if S < W - 1:
+        tail = jnp.pad(xbc_raw, ((0, 0), (W - 1 - S, 0), (0, 0)))
+    state = {"conv": tail.astype(jnp.float32), "ssd": h_final}
+    return out, state
+
+
+def init_mamba2_state(batch: int, d: int, cfg, dtype=jnp.float32):
+    inner = cfg.ssm.expand * d
+    nheads = inner // cfg.ssm.head_dim
+    conv_ch = inner + 2 * cfg.ssm.state_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, conv_ch), dtype),
+        "ssd": jnp.zeros((batch, nheads, cfg.ssm.state_dim, cfg.ssm.head_dim), dtype),
+    }
+
+
+def mamba2_decode_step(params: Params, x: jnp.ndarray, state: Dict[str, jnp.ndarray], cfg):
+    """One-token step. x: (B,1,D). Returns (y (B,1,D), new_state)."""
+    B, _, d = x.shape
+    inner = cfg.ssm.expand * d
+    nheads = inner // cfg.ssm.head_dim
+    N = cfg.ssm.state_dim
+    proj = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].astype(x.dtype))
+    z, xbc, dt = _split_proj(proj, inner, N, nheads)
+    xbc = xbc[:, 0]  # (B, C)
+    # rolling conv state
+    conv_in = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # (B,W,C)
+    w = params["conv_w"].astype(x.dtype)
+    out = jnp.einsum("bwc,wc->bc", conv_in, w) + params["conv_b"].astype(x.dtype)
+    xbc = jax.nn.silu(out)
+    new_conv = conv_in[:, 1:]
+
+    xs = xbc[..., :inner].reshape(B, nheads, cfg.ssm.head_dim)
+    Bm = xbc[..., inner : inner + N]
+    Cm = xbc[..., inner + N :]
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dtv * A)  # (B,H)
+    h = state["ssd"].astype(jnp.float32)
+    h = h * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dtv, Bm.astype(jnp.float32), xs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), h) + xs.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(B, 1, inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5) * params["norm_scale"]).astype(x.dtype)
+    y = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(x.dtype))
+    return y, {"conv": new_conv.astype(state["conv"].dtype), "ssd": h.astype(state["ssd"].dtype)}

@@ -1,0 +1,615 @@
+"""The model stack: scan-over-layers decoder supporting all assigned families.
+
+Layer layout per family (DESIGN.md §4):
+  dense/audio        uniform [attn + mlp] x L                  -> single scan
+  moe (moe_every=1)  uniform [attn + moe] x L                  -> single scan
+  moe (moe_every=2)  groups of [dense layer, moe layer]        -> scan groups
+  vlm                groups of [(ce-1) self layers, 1 cross]   -> scan groups
+  hybrid (zamba2)    groups of [k mamba layers, shared attn]   -> scan groups;
+                     shared attention params closed over (zamba2 weight share)
+  ssm (xlstm)        groups of [mLSTM, sLSTM]                  -> scan groups
+
+Scan keeps HLO size O(1) in depth (the 100-layer 90B VLM lowers fast) and
+per-group remat bounds live activations — both load-bearing for the
+512-device dry-run on a CPU host.
+
+Caches are pytrees stacked along the leading group axis so prefill/decode is
+also a scan (cache slices ride along as scan xs/ys).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import embed, init_embedding, init_mlp, make_norm, mlp, unembed
+
+Params = Dict[str, Any]
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class CallConfig:
+    """Per-call (not per-arch) knobs: distribution + memory policy."""
+
+    dp_size: int = 1            # number of batch shards (MoE local dispatch)
+    block_kv: int = 512         # flash attention KV block
+    remat: str = "block"        # "none" | "block"
+    shard_fn: Optional[Callable[[jnp.ndarray, Tuple], jnp.ndarray]] = None
+    compute_dtype: Any = jnp.bfloat16
+    cache_dtype: Any = jnp.bfloat16
+
+    def shard(self, x: jnp.ndarray, axes: Tuple) -> jnp.ndarray:
+        return self.shard_fn(x, axes) if self.shard_fn is not None else x
+
+
+def _maybe_remat(fn, cc: CallConfig):
+    if cc.remat == "block":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init over a leading layer axis -> (stacked params, axes)."""
+    keys = jax.random.split(key, n)
+    _, ax = init_fn(keys[0])
+    stacked = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    ax = jax.tree.map(
+        lambda a: ("layers",) + tuple(a), ax, is_leaf=lambda t: isinstance(t, tuple)
+    )
+    return stacked, ax
+
+
+# ---------------------------------------------------------------------------
+# Standard decoder block (attn [+cross] + ffn/moe)
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_block(key, cfg: ArchConfig, *, is_moe_layer: bool, cross: bool = False):
+    init_norm, _ = make_norm(cfg.norm)
+    ks = jax.random.split(key, 2)
+    p: Params = {}
+    ax: Params = {}
+    p["ln1"], ax["ln1"] = init_norm(cfg.d_model)
+    p["attn"], ax["attn"] = attn_lib.init_attention(
+        ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, qkv_bias=cfg.qkv_bias and not cross
+    )
+    if cfg.d_ff > 0:
+        p["ln2"], ax["ln2"] = init_norm(cfg.d_model)
+        if is_moe_layer:
+            p["moe"], ax["moe"] = moe_lib.init_moe(
+                ks[1], cfg.d_model, cfg.d_ff, cfg.moe.num_experts,
+                ep_split=cfg.moe.ep_split,
+            )
+        else:
+            p["mlp"], ax["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation)
+    return p, ax
+
+
+def _ffn_part(p, x, cfg, cc):
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.d_ff > 0:
+        _, norm = make_norm(cfg.norm)
+        h = norm(p["ln2"], x)
+        if "moe" in p:
+            y, aux = moe_lib.moe_forward(
+                p["moe"], h, top_k=cfg.moe.top_k, num_experts=cfg.moe.num_experts,
+                capacity_factor=cfg.moe.capacity_factor, dp_size=cc.dp_size,
+                shard_fn=cc.shard_fn, ep_split=cfg.moe.ep_split,
+            )
+        else:
+            y = mlp(p["mlp"], h, cfg.activation)
+        x = cc.shard(x + y, ("batch", "seq", "embed"))
+    return x, aux
+
+
+def _self_block_seq(p, x, cfg, cc, positions, cache):
+    """Full-sequence self-attn block; fills cache when given."""
+    _, norm = make_norm(cfg.norm)
+    h = norm(p["ln1"], x)
+    y, new_cache = attn_lib.attention_block(
+        p["attn"], h, positions, cfg.num_heads, cfg.num_kv_heads,
+        rope_theta=cfg.rope_theta, rope_fraction=cfg.rope_fraction,
+        block_kv=cc.block_kv, kv_cache=cache, cache_pos=None,
+    )
+    x = cc.shard(x + y, ("batch", "seq", "embed"))
+    x, aux = _ffn_part(p, x, cfg, cc)
+    return x, new_cache, aux
+
+
+def _self_block_step(p, x, cfg, cc, pos, cache):
+    """One-token decode step against KV cache."""
+    _, norm = make_norm(cfg.norm)
+    B = x.shape[0]
+    h = norm(p["ln1"], x)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    y, new_cache = attn_lib.attention_block(
+        p["attn"], h, positions, cfg.num_heads, cfg.num_kv_heads,
+        rope_theta=cfg.rope_theta, rope_fraction=cfg.rope_fraction,
+        block_kv=cc.block_kv, kv_cache=cache, cache_pos=pos,
+    )
+    x = x + y
+    x, _ = _ffn_part(p, x, cfg, cc)
+    return x, new_cache
+
+
+def _cross_block_seq(p, x, cfg, cc, ctx_or_kv, cache):
+    """Cross-attn block. ctx_or_kv: image embeds (B,T,D) or cached (k,v)."""
+    _, norm = make_norm(cfg.norm)
+    h = norm(p["ln1"], x)
+    if isinstance(ctx_or_kv, tuple):
+        k, v = ctx_or_kv
+    else:
+        k, v = attn_lib.cross_kv(p["attn"], ctx_or_kv, cfg.num_heads, cfg.num_kv_heads, cfg.d_model)
+    y = attn_lib.cross_attention_kv(p["attn"], h, k, v, cfg.num_heads, block_kv=cc.block_kv)
+    x = cc.shard(x + y, ("batch", "seq", "embed"))
+    x, aux = _ffn_part(p, x, cfg, cc)
+    new_cache = (k.astype(cc.cache_dtype), v.astype(cc.cache_dtype)) if cache is not None else None
+    return x, new_cache, aux
+
+
+def _kv_cache_zeros(cfg: ArchConfig, batch: int, max_seq: int, dtype):
+    hd = cfg.head_dim
+    shp = (batch, max_seq, cfg.num_kv_heads, hd)
+    return (jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    """Functional model facade: init/forward/loss/prefill/decode_step."""
+
+    def __init__(self, cfg: ArchConfig, cc: Optional[CallConfig] = None):
+        self.cfg = cfg
+        self.cc = cc or CallConfig()
+        self._axes: PyTree = None
+        # vocab padded to a shardable multiple of 128 (minicpm's 122753 is
+        # prime-ish — unpadded it replicates 16-32GB of logits per device);
+        # padded logit columns are masked to -inf in _logits.
+        self.padded_vocab = ((cfg.vocab_size + 127) // 128) * 128 \
+            if cfg.vocab_size % 128 else cfg.vocab_size
+
+    # -------------------- init --------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        p: Params = {}
+        ax: Params = {}
+        pv = self.padded_vocab
+        if cfg.num_codebooks:
+            p["embed"] = {
+                "table": jax.random.normal(
+                    ks[0], (cfg.num_codebooks, pv, cfg.d_model), jnp.float32
+                ) * 0.02
+            }
+            ax["embed"] = {"table": (None, "vocab", "embed")}
+        else:
+            p["embed"], ax["embed"] = init_embedding(ks[0], pv, cfg.d_model)
+        init_norm, _ = make_norm(cfg.norm)
+        p["ln_f"], ax["ln_f"] = init_norm(cfg.d_model)
+        if not cfg.tie_embeddings:
+            if cfg.num_codebooks:
+                p["unembed"] = {
+                    "table": jax.random.normal(
+                        ks[1], (cfg.num_codebooks, pv, cfg.d_model), jnp.float32
+                    ) * 0.02
+                }
+                ax["unembed"] = {"table": (None, "vocab", "embed")}
+            else:
+                p["unembed"], ax["unembed"] = init_embedding(ks[1], pv, cfg.d_model)
+
+        fam = cfg.family
+        if fam in ("dense", "audio") or (fam == "moe" and cfg.moe.moe_every == 1):
+            p["blocks"], ax["blocks"] = _stack_init(
+                lambda k: _init_attn_block(k, cfg, is_moe_layer=(fam == "moe")),
+                ks[2], cfg.num_layers,
+            )
+        elif fam == "moe":
+            assert cfg.moe.moe_every == 2, "moe_every in {1,2} supported"
+            ng = cfg.num_layers // 2
+
+            def group_init(k):
+                k1, k2 = jax.random.split(k)
+                dp, dax = _init_attn_block(k1, cfg, is_moe_layer=False)
+                mp, max_ = _init_attn_block(k2, cfg, is_moe_layer=True)
+                return {"dense": dp, "moe_l": mp}, {"dense": dax, "moe_l": max_}
+
+            p["blocks"], ax["blocks"] = _stack_init(group_init, ks[2], ng)
+        elif fam == "vlm":
+            ce = cfg.cross_attn_every
+            ng = cfg.num_layers // ce
+
+            def group_init(k):
+                k1, k2 = jax.random.split(k)
+                selfs, sax = _stack_init(
+                    lambda k3: _init_attn_block(k3, cfg, is_moe_layer=False), k1, ce - 1
+                )
+                crossp, cax = _init_attn_block(k2, cfg, is_moe_layer=False, cross=True)
+                return {"selfs": selfs, "cross": crossp}, {"selfs": sax, "cross": cax}
+
+            p["blocks"], ax["blocks"] = _stack_init(group_init, ks[2], ng)
+        elif fam == "hybrid":
+            ke = cfg.hybrid_attn_every
+            ng, rem = divmod(cfg.num_layers, ke)
+
+            def _init_mamba_block(k):
+                pp: Params = {}
+                aa: Params = {}
+                pp["ln"], aa["ln"] = init_norm(cfg.d_model)
+                pp["mamba"], aa["mamba"] = ssm_lib.init_mamba2(
+                    k, cfg.d_model, expand=cfg.ssm.expand, head_dim=cfg.ssm.head_dim,
+                    state_dim=cfg.ssm.state_dim, conv_width=cfg.ssm.conv_width,
+                )
+                return pp, aa
+
+            p["blocks"], ax["blocks"] = _stack_init(
+                lambda k: _stack_init(_init_mamba_block, k, ke), ks[2], ng
+            )
+            if rem:
+                p["tail"], ax["tail"] = _stack_init(_init_mamba_block, ks[3], rem)
+            p["shared_attn"], ax["shared_attn"] = _init_attn_block(ks[4], cfg, is_moe_layer=False)
+        elif fam == "ssm":
+            ng = cfg.num_layers // 2
+
+            def pair_init(k):
+                k1, k2 = jax.random.split(k)
+                pp: Params = {}
+                aa: Params = {}
+                pp["ln_m"], aa["ln_m"] = init_norm(cfg.d_model)
+                pp["mlstm"], aa["mlstm"] = xlstm_lib.init_mlstm(k1, cfg.d_model, cfg.num_heads)
+                pp["ln_s"], aa["ln_s"] = init_norm(cfg.d_model)
+                pp["slstm"], aa["slstm"] = xlstm_lib.init_slstm(k2, cfg.d_model, cfg.num_heads)
+                return pp, aa
+
+            p["blocks"], ax["blocks"] = _stack_init(pair_init, ks[2], ng)
+        else:
+            raise ValueError(fam)
+        self._axes = ax
+        return p
+
+    def axes_tree(self) -> PyTree:
+        if self._axes is None:
+            jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return self._axes
+
+    # -------------------- embedding / logits --------------------
+    def _embed_tokens(self, p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+        cfg, cc = self.cfg, self.cc
+        if cfg.num_codebooks:
+            tabs = p["embed"]["table"].astype(cc.compute_dtype)  # (K,V,D)
+            x = sum(tabs[i][tokens[..., i]] for i in range(cfg.num_codebooks))
+        else:
+            x = embed(p["embed"], tokens, cc.compute_dtype)
+        return cc.shard(x, ("batch", "seq", "embed"))
+
+    def _logits(self, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        _, norm = make_norm(cfg.norm)
+        x = norm(p["ln_f"], x)
+        table = p["embed"] if cfg.tie_embeddings else p["unembed"]
+        if cfg.num_codebooks:
+            tabs = table["table"].astype(x.dtype)  # (K,Vp,D)
+            logits = jnp.einsum("bsd,kvd->bskv", x, tabs)
+        else:
+            logits = self.cc.shard(unembed(table, x), ("batch", "seq", "vocab"))
+        if self.padded_vocab != cfg.vocab_size:
+            valid = jnp.arange(self.padded_vocab) < cfg.vocab_size
+            logits = jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+        return logits
+
+    # -------------------- cache construction --------------------
+    def init_cache(self, batch: int, max_seq: int, *, image_embeds=None) -> PyTree:
+        cfg, cc = self.cfg, self.cc
+        dt = cc.cache_dtype
+        fam = cfg.family
+        kvz = lambda: _kv_cache_zeros(cfg, batch, max_seq, dt)
+
+        def stack(n, fn):
+            one = fn()
+            return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+
+        if fam in ("dense", "audio") or (fam == "moe" and cfg.moe.moe_every == 1):
+            return stack(cfg.num_layers, kvz)
+        if fam == "moe":
+            return stack(cfg.num_layers // 2, lambda: {"dense": kvz(), "moe_l": kvz()})
+        if fam == "vlm":
+            ce = cfg.cross_attn_every
+            T = cfg.num_image_tokens
+            hd = cfg.head_dim
+
+            def group():
+                ckv = (
+                    jnp.zeros((batch, T, cfg.num_kv_heads, hd), dt),
+                    jnp.zeros((batch, T, cfg.num_kv_heads, hd), dt),
+                )
+                return {"selfs": stack(ce - 1, kvz), "cross": ckv}
+
+            return stack(cfg.num_layers // ce, group)
+        if fam == "hybrid":
+            ke = cfg.hybrid_attn_every
+            ng, rem = divmod(cfg.num_layers, ke)
+            mstate = lambda: ssm_lib.init_mamba2_state(batch, cfg.d_model, cfg, jnp.float32)
+            c = {"groups": stack(ng, lambda: {"mamba": stack(ke, mstate), "attn": kvz()})}
+            if rem:
+                c["tail"] = stack(rem, mstate)
+            return c
+        if fam == "ssm":
+            def pair():
+                return {
+                    "mlstm": xlstm_lib.init_mlstm_state(batch, cfg.d_model, cfg.num_heads, jnp.float32),
+                    "slstm": xlstm_lib.init_slstm_state(batch, cfg.d_model, cfg.num_heads, jnp.float32),
+                }
+            return stack(cfg.num_layers // 2, pair)
+        raise ValueError(fam)
+
+    # -------------------- full-sequence forward (train / prefill) --------------------
+    def forward(self, p: Params, tokens: jnp.ndarray, *, image_embeds=None, cache=None,
+                logits_last_only: bool = False):
+        """Returns (logits, new_cache (None in pure train), aux_loss)."""
+        cfg, cc = self.cfg, self.cc
+        x = self._embed_tokens(p, tokens)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        aux0 = jnp.zeros((), jnp.float32)
+        fam = cfg.family
+
+        if fam in ("dense", "audio") or (fam == "moe" and cfg.moe.moe_every == 1):
+            def body(carry, xs):
+                x, aux = carry
+                lp, lc = xs
+                x, newc, a = _self_block_seq(lp, x, cfg, cc, positions, lc)
+                return (x, aux + a), newc
+
+            (x, aux0), new_cache = jax.lax.scan(_maybe_remat(body, cc), (x, aux0), (p["blocks"], cache))
+        elif fam == "moe":
+            def body(carry, xs):
+                x, aux = carry
+                gp, gc = xs
+                x, c_d, a1 = _self_block_seq(gp["dense"], x, cfg, cc, positions, gc["dense"] if gc is not None else None)
+                x, c_m, a2 = _self_block_seq(gp["moe_l"], x, cfg, cc, positions, gc["moe_l"] if gc is not None else None)
+                newc = {"dense": c_d, "moe_l": c_m} if gc is not None else None
+                return (x, aux + a1 + a2), newc
+
+            (x, aux0), new_cache = jax.lax.scan(_maybe_remat(body, cc), (x, aux0), (p["blocks"], cache))
+        elif fam == "vlm":
+            ctx = image_embeds.astype(cc.compute_dtype)
+
+            def body(carry, xs):
+                x, aux = carry
+                gp, gc = xs
+
+                def inner(cr, ixs):
+                    xx, aa = cr
+                    ip, ic = ixs
+                    xx, nc, a = _self_block_seq(ip, xx, cfg, cc, positions, ic)
+                    return (xx, aa + a), nc
+
+                (x, aux), c_s = jax.lax.scan(
+                    inner, (x, aux), (gp["selfs"], gc["selfs"] if gc is not None else None)
+                )
+                x, c_x, a = _cross_block_seq(
+                    gp["cross"], x, cfg, cc, ctx, gc["cross"] if gc is not None else None
+                )
+                newc = {"selfs": c_s, "cross": c_x} if gc is not None else None
+                return (x, aux + a), newc
+
+            (x, aux0), new_cache = jax.lax.scan(_maybe_remat(body, cc), (x, aux0), (p["blocks"], cache))
+        elif fam == "hybrid":
+            shared = p["shared_attn"]
+            _, norm = make_norm(cfg.norm)
+
+            def mamba_seq(xx, lp, lc):
+                h = norm(lp["ln"], xx)
+                if lc is not None:
+                    y, st = ssm_lib.mamba2_forward(lp["mamba"], h, cfg, return_state=True)
+                else:
+                    y, st = ssm_lib.mamba2_forward(lp["mamba"], h, cfg), None
+                return cc.shard(xx + y, ("batch", "seq", "embed")), st
+
+            gcache = cache["groups"] if cache is not None else None
+
+            def group_body(carry, xs):
+                x, aux = carry
+                gp, gc = xs
+
+                def inner(xx, ixs):
+                    ip, ic = ixs
+                    xx, st = mamba_seq(xx, ip, ic)
+                    return xx, st
+
+                x, m_states = jax.lax.scan(
+                    inner, x, (gp, gc["mamba"] if gc is not None else None)
+                )
+                x, c_a, a = _self_block_seq(shared, x, cfg, cc, positions, gc["attn"] if gc is not None else None)
+                newc = {"mamba": m_states, "attn": c_a} if gc is not None else None
+                return (x, aux + a), newc
+
+            (x, aux0), new_groups = jax.lax.scan(
+                _maybe_remat(group_body, cc), (x, aux0), (p["blocks"], gcache)
+            )
+            new_cache = None
+            if cache is not None:
+                new_cache = {"groups": new_groups}
+            if "tail" in p:
+                tcache = cache["tail"] if cache is not None else None
+
+                def tail_body(xx, ixs):
+                    ip, ic = ixs
+                    return mamba_seq(xx, ip, ic)
+
+                x, t_states = jax.lax.scan(_maybe_remat(tail_body, cc), x, (p["tail"], tcache))
+                if cache is not None:
+                    new_cache["tail"] = t_states
+        elif fam == "ssm":
+            _, norm = make_norm(cfg.norm)
+
+            def body(carry, xs):
+                x, aux = carry
+                gp, gc = xs
+                if gc is not None:
+                    ym, st_m = xlstm_lib.mlstm_forward(gp["mlstm"], norm(gp["ln_m"], x), cfg.num_heads, return_state=True)
+                else:
+                    ym, st_m = xlstm_lib.mlstm_forward(gp["mlstm"], norm(gp["ln_m"], x), cfg.num_heads), None
+                x = cc.shard(x + ym, ("batch", "seq", "embed"))
+                if gc is not None:
+                    ys, st_s = xlstm_lib.slstm_forward(gp["slstm"], norm(gp["ln_s"], x), cfg.num_heads, return_state=True)
+                else:
+                    ys, st_s = xlstm_lib.slstm_forward(gp["slstm"], norm(gp["ln_s"], x), cfg.num_heads), None
+                x = cc.shard(x + ys, ("batch", "seq", "embed"))
+                newc = {"mlstm": st_m, "slstm": st_s} if gc is not None else None
+                return (x, aux), newc
+
+            (x, aux0), new_cache = jax.lax.scan(_maybe_remat(body, cc), (x, aux0), (p["blocks"], cache))
+        else:
+            raise ValueError(fam)
+
+        if logits_last_only:
+            x = x[:, -1:]  # prefill: unembed only the last position
+        logits = self._logits(p, x)
+        return logits, new_cache, aux0
+
+    # -------------------- prefill --------------------
+    def prefill(self, p: Params, tokens: jnp.ndarray, cache: PyTree, *, image_embeds=None):
+        """Fill cache from a prompt; returns (last-token logits, cache)."""
+        logits, new_cache, _ = self.forward(
+            p, tokens, image_embeds=image_embeds, cache=cache, logits_last_only=True
+        )
+        return logits, new_cache
+
+    # -------------------- decode --------------------
+    def decode_step(self, p: Params, token: jnp.ndarray, cache: PyTree, pos: jnp.ndarray):
+        """One-token step. token: (B,1) (or (B,1,K) audio); pos: scalar int32.
+
+        Returns (logits (B,1,V...), new_cache).
+        """
+        cfg, cc = self.cfg, self.cc
+        x = self._embed_tokens(p, token)
+        fam = cfg.family
+
+        if fam in ("dense", "audio") or (fam == "moe" and cfg.moe.moe_every == 1):
+            # fori_loop with the full stacked cache as CARRY (not scan xs/ys):
+            # while-loop carries alias in place, so the donated cache is
+            # updated without a second full-size ys buffer (a 2x KV-cache
+            # temp for qwen's 5.5TB MHA cache — 55GB/device before this).
+            nl = jax.tree.leaves(p["blocks"])[0].shape[0]
+
+            def body(l, carry):
+                x, cch = carry
+                lp = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, l, keepdims=False),
+                    p["blocks"],
+                )
+                lc = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, l, keepdims=False), cch
+                )
+                x, newc = _self_block_step(lp, x, cfg, cc, pos, lc)
+                cch = jax.tree.map(
+                    lambda full, upd: jax.lax.dynamic_update_index_in_dim(full, upd, l, 0),
+                    cch, newc,
+                )
+                return (x, cch)
+
+            x, new_cache = jax.lax.fori_loop(0, nl, body, (x, cache))
+        elif fam == "moe":
+            def body(x, xs):
+                gp, gc = xs
+                x, c_d = _self_block_step(gp["dense"], x, cfg, cc, pos, gc["dense"])
+                x, c_m = _self_block_step(gp["moe_l"], x, cfg, cc, pos, gc["moe_l"])
+                return x, {"dense": c_d, "moe_l": c_m}
+
+            x, new_cache = jax.lax.scan(body, x, (p["blocks"], cache))
+        elif fam == "vlm":
+            _, norm = make_norm(cfg.norm)
+
+            def body(x, xs):
+                gp, gc = xs
+
+                def inner(xx, ixs):
+                    ip, ic = ixs
+                    xx, nc = _self_block_step(ip, xx, cfg, cc, pos, ic)
+                    return xx, nc
+
+                x, c_s = jax.lax.scan(inner, x, (gp["selfs"], gc["selfs"]))
+                k, v = gc["cross"]
+                h = norm(gp["cross"]["ln1"], x)
+                y = attn_lib.cross_attention_kv(gp["cross"]["attn"], h, k.astype(x.dtype), v.astype(x.dtype), cfg.num_heads, block_kv=cc.block_kv)
+                x = x + y
+                x, _ = _ffn_part(gp["cross"], x, cfg, cc)
+                return x, {"selfs": c_s, "cross": gc["cross"]}
+
+            x, new_cache = jax.lax.scan(body, x, (p["blocks"], cache))
+        elif fam == "hybrid":
+            shared = p["shared_attn"]
+            _, norm = make_norm(cfg.norm)
+
+            def mamba_step(xx, lp, lc):
+                h = norm(lp["ln"], xx)
+                y, st = ssm_lib.mamba2_decode_step(lp["mamba"], h, lc, cfg)
+                return xx + y, st
+
+            def group_body(x, xs):
+                gp, gc = xs
+
+                def inner(xx, ixs):
+                    ip, ic = ixs
+                    return mamba_step(xx, ip, ic)
+
+                x, m_states = jax.lax.scan(inner, x, (gp, gc["mamba"]))
+                x, c_a = _self_block_step(shared, x, cfg, cc, pos, gc["attn"])
+                return x, {"mamba": m_states, "attn": c_a}
+
+            x, new_groups = jax.lax.scan(group_body, x, (p["blocks"], cache["groups"]))
+            new_cache = {"groups": new_groups}
+            if "tail" in p:
+                def tail_body(xx, ixs):
+                    ip, ic = ixs
+                    return mamba_step(xx, ip, ic)
+
+                x, t_states = jax.lax.scan(tail_body, x, (p["tail"], cache["tail"]))
+                new_cache["tail"] = t_states
+        elif fam == "ssm":
+            _, norm = make_norm(cfg.norm)
+
+            def body(x, xs):
+                gp, gc = xs
+                ym, st_m = xlstm_lib.mlstm_decode_step(gp["mlstm"], norm(gp["ln_m"], x), gc["mlstm"], cfg.num_heads)
+                x = x + ym
+                ys, st_s = xlstm_lib.slstm_decode_step(gp["slstm"], norm(gp["ln_s"], x), gc["slstm"], cfg.num_heads)
+                x = x + ys
+                return x, {"mlstm": st_m, "slstm": st_s}
+
+            x, new_cache = jax.lax.scan(body, x, (p["blocks"], cache))
+        else:
+            raise ValueError(fam)
+
+        return self._logits(p, x), new_cache
+
+    # -------------------- loss --------------------
+    def loss(self, p: Params, batch: Dict[str, jnp.ndarray]):
+        """Cross-entropy written vocab-shard-friendly: logsumexp reduces the
+        sharded vocab axis (partial + all-reduce) and the target logit is a
+        one-hot contraction — no gather across the sharded axis, so logits
+        never get all-gathered (matters at vocab 200k x 1M tokens)."""
+        logits, _, aux = self.forward(p, batch["tokens"], image_embeds=batch.get("image_embeds"))
+        targets = batch["targets"]
+        lf = logits.astype(jnp.float32)
+        m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+        logz = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+        onehot = jax.nn.one_hot(targets, self.padded_vocab, dtype=lf.dtype)
+        tgt = jnp.sum(lf * onehot, axis=-1)
+        nll = jnp.mean(logz - tgt)
+        return nll + 0.01 * aux, {"nll": nll, "aux": aux}
+
+
+def build_model(cfg: ArchConfig, cc: Optional[CallConfig] = None) -> Model:
+    return Model(cfg, cc)

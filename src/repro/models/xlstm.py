@@ -1,0 +1,254 @@
+"""xLSTM blocks (sLSTM + mLSTM) — used by xlstm-350m. [arXiv:2405.04517]
+
+mLSTM: matrix memory C (N x N per head), exponential input gate with
+max-stabilizer m, parallelizable in chunks; here implemented as a chunked
+lax.scan (state carried across chunks, quadratic within chunk) so both 4k
+training and 500k decode lower to O(S) programs.
+
+sLSTM: scalar memory with recurrent gate connections (block-diagonal R per
+head) -> strictly sequential lax.scan over time. The recurrence itself has
+no matmul reduction to localize, so the paper's COM technique applies only
+to the surrounding projections (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d: int, num_heads: int) -> Tuple[Params, Params]:
+    hd = d // num_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, d),
+        "wk": dense_init(ks[1], d, d),
+        "wv": dense_init(ks[2], d, d),
+        "wi": dense_init(ks[3], d, num_heads),  # input gate (per head)
+        "wf": dense_init(ks[4], d, num_heads),  # forget gate (per head)
+        "wo_gate": dense_init(ks[5], d, d),     # sigmoid output gate
+        "wo": dense_init(jax.random.fold_in(key, 7), d, d),
+    }
+    ax = {
+        "wq": ("embed", "heads"), "wk": ("embed", "heads"), "wv": ("embed", "heads"),
+        "wi": ("embed", None), "wf": ("embed", None),
+        "wo_gate": ("embed", "heads"), "wo": ("heads", "embed"),
+    }
+    return p, ax
+
+
+def _mlstm_chunk_scan(q, k, v, ig, fg, *, chunk: int, init_state=None):
+    """q,k,v: (B,S,H,N); ig,fg: (B,S,H) pre-activation gates.
+
+    Stabilized chunked mLSTM. Returns h (B,S,H,N) and final state
+    (C (B,H,N,N), n (B,H,N), m (B,H)).
+    """
+    B, S, H, N = q.shape
+    Q = min(chunk, S)
+    nc = (S + Q - 1) // Q
+    pad = nc * Q - S
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)))
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)), constant_values=30.0)  # e^30 ~ keep
+
+    f32 = jnp.float32
+    qc = q.reshape(B, nc, Q, H, N).astype(f32) / math.sqrt(N)
+    kc = k.reshape(B, nc, Q, H, N).astype(f32)
+    vc = v.reshape(B, nc, Q, H, N).astype(f32)
+    igc = ig.reshape(B, nc, Q, H).astype(f32)
+    logf = jax.nn.log_sigmoid(fg.reshape(B, nc, Q, H).astype(f32))
+    F = jnp.cumsum(logf, axis=2)  # within-chunk cumulative log forget
+
+    def scan_fn(carry, xs):
+        C, n, m = carry  # (B,H,N,N), (B,H,N), (B,H)
+        qb, kb, vb, ib, Fb, logfb = xs
+        Ftot = Fb[:, -1]  # (B,H) total chunk log-forget
+        # log weight of step s's contribution at chunk end: Ftot - F_s + i_s
+        a = Ftot[:, None] - Fb + ib  # (B,Q,H)
+        # intra-chunk: D[t,s] = F_t - F_s + i_s  (s<=t)
+        Dm = Fb[:, :, None, :] - Fb[:, None, :, :] + ib[:, None, :, :]  # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        Dm = jnp.where(tri[None, :, :, None], Dm, -jnp.inf)
+        # inter-chunk log weight at step t: F_t + m_prev
+        inter_w = Fb + m[:, None, :]  # (B,Q,H)
+        m_intra = jnp.max(Dm, axis=2)  # (B,t,H)
+        m_new_t = jnp.maximum(m_intra, inter_w)  # running stabilizer per t
+        s = jnp.einsum("bthn,bshn->btsh", qb, kb)
+        w_intra = jnp.exp(Dm - m_new_t[:, :, None, :]) * s
+        h_num = jnp.einsum("btsh,bshn->bthn", w_intra, vb)
+        # normalizer accumulates the same exp-weighted scores
+        n_intra = jnp.sum(w_intra, axis=2)  # (B,t,H)
+        w_inter = jnp.exp(inter_w - m_new_t)  # (B,t,H)
+        h_num = h_num + w_inter[..., None] * jnp.einsum("bthn,bhnm->bthm", qb, C)
+        n_t = n_intra + w_inter * jnp.einsum("bthn,bhn->bth", qb, n)
+        h = h_num / jnp.maximum(jnp.abs(n_t), jnp.exp(-m_new_t))[..., None]
+        # state update to chunk end
+        m_end = jnp.maximum(Ftot + m, jnp.max(a, axis=1))  # (B,H)
+        decay = jnp.exp(Ftot + m - m_end)
+        contrib = jnp.exp(a - m_end[:, None])  # (B,Q,H)
+        C_new = C * decay[:, :, None, None] + jnp.einsum(
+            "bsh,bshn,bshm->bhnm", contrib, kb, vb
+        )
+        n_new = n * decay[:, :, None] + jnp.einsum("bsh,bshn->bhn", contrib, kb)
+        return (C_new, n_new, m_end), h
+
+    if init_state is None:
+        C0 = jnp.zeros((B, H, N, N), f32)
+        n0 = jnp.zeros((B, H, N), f32)
+        m0 = jnp.full((B, H), -1e30, f32)
+    else:
+        C0, n0, m0 = init_state
+    xs = tuple(
+        t.swapaxes(0, 1)
+        for t in (qc, kc, vc, igc, F, logf)
+    )
+    (C, n, m), hs = jax.lax.scan(scan_fn, (C0, n0, m0), xs)
+    h = hs.swapaxes(0, 1).reshape(B, nc * Q, H, N)[:, :S]
+    return h, (C, n, m)
+
+
+def mlstm_forward(params: Params, x: jnp.ndarray, num_heads: int, *, chunk: int = 128, return_state: bool = False):
+    B, S, d = x.shape
+    hd = d // num_heads
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype)).reshape(B, S, num_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype)).reshape(B, S, num_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype)).reshape(B, S, num_heads, hd)
+    ig = jnp.einsum("bsd,dh->bsh", x, params["wi"].astype(x.dtype))
+    fg = jnp.einsum("bsd,dh->bsh", x, params["wf"].astype(x.dtype))
+    h, (C, n, m) = _mlstm_chunk_scan(q, k, v, ig, fg, chunk=chunk)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,dh->bsh", x, params["wo_gate"].astype(x.dtype)))
+    h = h.reshape(B, S, d).astype(x.dtype) * og
+    out = jnp.einsum("bsh,hd->bsd", h, params["wo"].astype(x.dtype))
+    if return_state:
+        return out, {"C": C, "n": n, "m": m}
+    return out
+
+
+def init_mlstm_state(batch: int, d: int, num_heads: int, dtype=jnp.float32):
+    hd = d // num_heads
+    return {
+        "C": jnp.zeros((batch, num_heads, hd, hd), dtype),
+        "n": jnp.zeros((batch, num_heads, hd), dtype),
+        "m": jnp.full((batch, num_heads), -1e30, dtype),
+    }
+
+
+def mlstm_decode_step(params: Params, x: jnp.ndarray, state, num_heads: int):
+    """x: (B,1,D)."""
+    B, _, d = x.shape
+    hd = d // num_heads
+    f32 = jnp.float32
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype)).reshape(B, num_heads, hd).astype(f32) / math.sqrt(hd)
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype)).reshape(B, num_heads, hd).astype(f32)
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype)).reshape(B, num_heads, hd).astype(f32)
+    ig = jnp.einsum("bsd,dh->bsh", x, params["wi"].astype(x.dtype))[:, 0].astype(f32)
+    fg = jnp.einsum("bsd,dh->bsh", x, params["wf"].astype(x.dtype))[:, 0].astype(f32)
+    logf = jax.nn.log_sigmoid(fg)
+    C, n, m = state["C"].astype(f32), state["n"].astype(f32), state["m"].astype(f32)
+    m_new = jnp.maximum(logf + m, ig)
+    decay = jnp.exp(logf + m - m_new)
+    inp = jnp.exp(ig - m_new)
+    C = C * decay[..., None, None] + inp[..., None, None] * jnp.einsum("bhn,bhm->bhnm", k, v)
+    n = n * decay[..., None] + inp[..., None] * k
+    num = jnp.einsum("bhn,bhnm->bhm", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhn,bhn->bh", q, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, d).astype(x.dtype)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,dh->bsh", x, params["wo_gate"].astype(x.dtype)))
+    y = jnp.einsum("bsh,hd->bsd", h * og, params["wo"].astype(x.dtype))
+    new_state = {"C": C.astype(state["C"].dtype), "n": n.astype(state["n"].dtype), "m": m_new.astype(state["m"].dtype)}
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d: int, num_heads: int) -> Tuple[Params, Params]:
+    hd = d // num_heads
+    ks = jax.random.split(key, 3)
+    p = {
+        # gates [i, f, z, o] from input
+        "wg": dense_init(ks[0], d, 4 * d),
+        # block-diagonal recurrent weights per head: (4, H, hd, hd)
+        "rg": jax.random.normal(ks[1], (4, num_heads, hd, hd), jnp.float32) * (1.0 / math.sqrt(hd)),
+        "bg": jnp.zeros((4 * d,), jnp.float32),
+        "wo": dense_init(ks[2], d, d),
+    }
+    ax = {"wg": ("embed", "heads"), "rg": (None, None, None, None), "bg": ("heads",), "wo": ("heads", "embed")}
+    return p, ax
+
+
+def init_slstm_state(batch: int, d: int, num_heads: int, dtype=jnp.float32):
+    hd = d // num_heads
+    z = lambda: jnp.zeros((batch, num_heads, hd), dtype)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, num_heads, hd), -1e30, dtype)}
+
+
+def _slstm_cell(params, gx, state, num_heads: int, hd: int):
+    """gx: (B, 4d) input-gate preactivations for one step."""
+    B = gx.shape[0]
+    f32 = jnp.float32
+    c, n, h, m = (state[k].astype(f32) for k in ("c", "n", "h", "m"))
+    g = gx.astype(f32).reshape(B, 4, num_heads, hd)
+    r = jnp.einsum("bhn,ghnm->bghm", h, params["rg"].astype(f32))
+    g = g + r
+    it, ft, zt, ot = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(logf + m - m_new)
+    c = f * c + i * jnp.tanh(zt)
+    n = f * n + i
+    h_new = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+    return {
+        "c": c.astype(state["c"].dtype),
+        "n": n.astype(state["n"].dtype),
+        "h": h_new.astype(state["h"].dtype),
+        "m": m_new.astype(state["m"].dtype),
+    }
+
+
+def slstm_forward(params: Params, x: jnp.ndarray, num_heads: int, *, return_state: bool = False):
+    """Sequential scan over time. x: (B,S,D).
+
+    The streamed tensors (gate pre-activations in, h out) stay in the
+    compute dtype (bf16): they are the only O(S)-sized traffic of the scan
+    and dominate its HBM cost; cell math remains f32 internally.
+    """
+    B, S, d = x.shape
+    hd = d // num_heads
+    gx = jnp.einsum("bsd,dk->bsk", x, params["wg"].astype(x.dtype)) + params["bg"].astype(x.dtype)
+
+    def step(state, g):
+        new = _slstm_cell(params, g, state, num_heads, hd)
+        return new, new["h"].astype(x.dtype)
+
+    state0 = init_slstm_state(B, d, num_heads, jnp.float32)
+    final, hs = jax.lax.scan(step, state0, gx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    out = jnp.einsum("bsh,hd->bsd", h, params["wo"].astype(x.dtype))
+    if return_state:
+        return out, final
+    return out
+
+
+def slstm_decode_step(params: Params, x: jnp.ndarray, state, num_heads: int):
+    B, _, d = x.shape
+    hd = d // num_heads
+    gx = jnp.einsum("bsd,dk->bsk", x, params["wg"].astype(x.dtype))[:, 0] + params["bg"].astype(x.dtype)
+    new = _slstm_cell(params, gx, state, num_heads, hd)
+    y = jnp.einsum("bsh,hd->bsd", new["h"].reshape(B, 1, d).astype(x.dtype), params["wo"].astype(x.dtype))
+    return y, new

@@ -1,0 +1,196 @@
+"""Logical-axis sharding: declarative rules -> NamedSharding trees.
+
+Params carry logical axis names from their ``init_*`` functions (see
+``models/layers.py``); activations/caches are annotated at call sites.
+``ShardingRules`` maps logical names to mesh axes with a divisibility
+fallback (a dim that doesn't divide the mesh axis product is replicated and
+the drop is recorded — e.g. minicpm's prime-ish vocab 122753).
+
+Two rule vocabularies (never mixed):
+  params:      embed / mlp / heads / kv / vocab / experts / layers
+  activations: batch / seq / embed(act) / vocab(act) / kv_seq / ...
+
+Mesh axes: ("data", "model") single pod, ("pod", "data", "model") multi-pod
+(launch/mesh.py). FSDP = param "embed" over data(+pod); TP = mlp/heads/vocab
+over model; EP = experts over model; decode KV sequence over model
+(flash-decoding LSE combine — DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+@dataclass
+class ShardingRules:
+    """Logical-name -> mesh-axis mapping for one job kind."""
+
+    rules: Dict[str, Any]
+    mesh: Mesh
+    dropped: List[str] = field(default_factory=list)
+
+    def spec_for(self, logical_axes: Tuple, shape: Tuple[int, ...]) -> P:
+        assert len(logical_axes) == len(shape), (logical_axes, shape)
+        out = []
+        used: set = set()
+        for name, dim in zip(logical_axes, shape):
+            axes = self.rules.get(name) if name is not None else None
+            if axes is None:
+                out.append(None)
+                continue
+            ax_t = (axes,) if isinstance(axes, str) else tuple(axes)
+            ax_t = tuple(a for a in ax_t if a in self.mesh.shape and a not in used)
+            size = _axis_size(self.mesh, ax_t)
+            if not ax_t or size <= 1 or dim % size != 0:
+                # divisibility fallback: try prefix subsets
+                while ax_t and (dim % _axis_size(self.mesh, ax_t) != 0):
+                    ax_t = ax_t[:-1]
+                if not ax_t:
+                    self.dropped.append(f"{name}:{dim}")
+                    out.append(None)
+                    continue
+            used.update(ax_t)
+            out.append(ax_t[0] if len(ax_t) == 1 else ax_t)
+        return P(*out)
+
+    def named(self, logical_axes: Tuple, shape: Tuple[int, ...]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical_axes, shape))
+
+    def tree_shardings(self, axes_tree: PyTree, shape_tree: PyTree) -> PyTree:
+        """axes_tree leaves are tuples of logical names; shape_tree leaves are
+        arrays/ShapeDtypeStructs of matching rank (extra *leading* dims in the
+        shape — layer-stack dims — are padded with None)."""
+
+        def go(ax, leaf):
+            shape = leaf.shape
+            ax = tuple(ax)
+            if len(ax) < len(shape):
+                ax = (None,) * (len(shape) - len(ax)) + ax
+            return self.named(ax, shape)
+
+        return jax.tree.map(
+            go, axes_tree, shape_tree, is_leaf=lambda t: isinstance(t, tuple) and all(
+                isinstance(x, (str, type(None))) for x in t
+            )
+        )
+
+
+# ---------------------------------------------------------------------------
+# Rule sets
+# ---------------------------------------------------------------------------
+
+
+def param_rules(mesh: Mesh) -> ShardingRules:
+    fsdp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    return ShardingRules(
+        rules={
+            "embed": fsdp,
+            "mlp": "model",
+            "heads": "model",
+            "kv": "model",
+            "vocab": "model",
+            "experts": "model",
+            # token-routing EP: expert slices over the FULL mesh (weights
+            # stationary; 'embed'/'mlp' on those leaves fall back to None
+            # via the used-axes rule)
+            "experts_ep": ("model",) + fsdp,
+            "layers": None,
+        },
+        mesh=mesh,
+    )
+
+
+def act_rules(mesh: Mesh, *, job: str = "train", seq_shard: bool = False) -> ShardingRules:
+    batch = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    rules = {
+        "batch": batch,
+        "seq": "model" if seq_shard else None,
+        "embed": None,
+        "vocab": "model",
+        # KV cache: sequence over model. Decode => LSE-combined attention
+        # (flash-decoding); prefill => the cache *write* is seq-sharded
+        # (attention itself runs on the fresh k/v, not the cache).
+        "kv_seq": "model" if job in ("decode", "prefill") else None,
+        "kv_heads": None,
+        "ssm_heads": "model",
+        "ssm_conv": "model",
+        # MoE dispatch: dp groups over batch axes, expert buffer over model
+        "exp_dp": batch,
+        "experts": "model",
+        "experts_ep": ("model",) + tuple(batch if isinstance(batch, tuple) else (batch,)),
+    }
+    return ShardingRules(rules=rules, mesh=mesh)
+
+
+def make_shard_fn(mesh: Mesh, rules: ShardingRules):
+    """Returns CallConfig.shard_fn: (x, logical_axes) -> constrained x."""
+
+    def shard(x, logical_axes):
+        spec = rules.spec_for(tuple(logical_axes), x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return shard
+
+
+# ---------------------------------------------------------------------------
+# Cache sharding (path-heuristic over the stacked cache pytree)
+# ---------------------------------------------------------------------------
+
+
+def cache_shardings(rules: ShardingRules, cache_tree: PyTree) -> PyTree:
+    """Assign shardings to a (stacked) cache pytree by leaf path."""
+
+    def base_axes(path_str: str, rank: int) -> Tuple:
+        if "cross" in path_str:
+            return ("batch", None, "kv_heads", None)
+        if "conv" in path_str:
+            return ("batch", None, "ssm_conv")
+        if "ssd" in path_str:
+            return ("batch", "ssm_heads", None, None)
+        if "mlstm" in path_str:
+            return {4: ("batch", None, None, None), 3: ("batch", None, None), 2: ("batch", None)}[min(rank, 4)]
+        if "slstm" in path_str:
+            return ("batch", None, None)
+        # default: self-attn kv (B, S, KVH, hd)
+        return ("batch", "kv_seq", "kv_heads", None)
+
+    def go(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        rank = len(leaf.shape)
+        ax = base_axes(pstr, rank)
+        # mlstm/slstm leaves have varying base rank; recompute against leaf
+        while len(ax) > rank:
+            ax = ax[1:]
+        ax = (None,) * (rank - len(ax)) + tuple(ax)
+        return rules.named(ax, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(go, cache_tree)
+
+
+def batch_shardings(rules: ShardingRules, batch_tree: PyTree) -> PyTree:
+    """Inputs: tokens/targets (B,S[,K]) + optional image_embeds (B,T,D)."""
+
+    def go(path, leaf):
+        rank = len(leaf.shape)
+        ax = ("batch",) + (None,) * (rank - 1)
+        return rules.named(ax, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(go, batch_tree)

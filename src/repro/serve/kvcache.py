@@ -1,0 +1,21 @@
+"""KV cache utilities for the serving engine."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def cache_bytes(cache: PyTree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def trim_report(cache: PyTree) -> Dict[str, float]:
+    leaves = jax.tree.leaves(cache)
+    return {
+        "n_leaves": len(leaves),
+        "total_gb": cache_bytes(cache) / 1e9,
+    }

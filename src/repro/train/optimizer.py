@@ -1,0 +1,170 @@
+"""Optimizer: AdamW with cosine / WSD schedules, global-norm clipping, and
+optional 8-bit (block-quantized) moments — the memory trick that lets the
+394B llama4-maverick fit a 256-chip v5e pod under FSDP (EXPERIMENTS.md
+§Dry-run), and the optimizer-side analogue of Domino's 8-bit data movement.
+
+Pure pytree functions (no optax dependency): ``init_opt_state`` /
+``adamw_update``. Quantized moments are stored as (int8 codes, per-row fp32
+scales); dequant/requant happens inside the update (never materializing a
+second fp32 copy of the full state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"      # "cosine" | "wsd" | "const"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1       # WSD: final fraction of steps in decay
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "fp32"    # "fp32" | "bf16" | "int8"
+    param_dtype: str = "fp32"     # "fp32" | "bf16" master weights
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def schedule_lr(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "const":
+        mult = jnp.ones(())
+    elif cfg.schedule == "cosine":
+        t = jnp.clip((step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        mult = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        # Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): flat LR for the
+        # stable phase then a short exponential-ish (here linear) decay tail.
+        decay_start = cfg.total_steps * (1 - cfg.decay_frac)
+        t = jnp.clip((step - decay_start) / max(cfg.total_steps - decay_start, 1), 0.0, 1.0)
+        mult = 1.0 - (1 - cfg.min_lr_ratio) * t
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.lr * warm * mult
+
+
+# ---------------------------------------------------------------------------
+# Quantized moment storage
+# ---------------------------------------------------------------------------
+
+
+def _quant(x: jnp.ndarray, signed: bool) -> Dict[str, jnp.ndarray]:
+    """Per-row (last-dim) linear quantization to int8/uint8 codes."""
+    if x.ndim == 0:
+        x = x[None]
+        squeeze = True
+    else:
+        squeeze = False
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True) if signed else jnp.max(x, axis=-1, keepdims=True)
+    qmax = 127.0 if signed else 255.0
+    scale = jnp.maximum(amax, 1e-20) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax if signed else 0, qmax)
+    q = q.astype(jnp.int8) if signed else q.astype(jnp.uint8)
+    out = {"q": q, "scale": scale.astype(jnp.float32)}
+    if squeeze:
+        out["_scalar"] = jnp.ones((), jnp.int8)
+    return out
+
+
+def _dequant(d: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    x = d["q"].astype(jnp.float32) * d["scale"]
+    if "_scalar" in d:
+        x = x[0]
+    return x
+
+
+def _is_qleaf(t) -> bool:
+    return isinstance(t, dict) and "q" in t and "scale" in t
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def init_opt_state(params: PyTree, cfg: OptConfig) -> Dict[str, PyTree]:
+    def zeros_like_moment(p, signed):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if cfg.moment_dtype == "bf16":
+            return z.astype(jnp.bfloat16)
+        if cfg.moment_dtype == "int8":
+            return _quant(z, signed)
+        return z
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: zeros_like_moment(p, True), params),
+        "v": jax.tree.map(lambda p: zeros_like_moment(p, False), params),
+    }
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(params: PyTree, grads: PyTree, opt_state: Dict[str, PyTree], cfg: OptConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    b1, b2 = cfg.betas
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd_slice(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_f = _dequant(m) if _is_qleaf(m) else m.astype(jnp.float32)
+        v_f = _dequant(v) if _is_qleaf(v) else v.astype(jnp.float32)
+        m_f = b1 * m_f + (1 - b1) * g
+        v_f = b2 * v_f + (1 - b2) * jnp.square(g)
+        update = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + cfg.eps)
+        new_p = p.astype(jnp.float32) - lr * (update + cfg.weight_decay * p.astype(jnp.float32))
+        if _is_qleaf(m):
+            m_f, v_f = _quant(m_f, True), _quant(v_f, False)
+        elif m.dtype == jnp.bfloat16:
+            m_f, v_f = m_f.astype(jnp.bfloat16), v_f.astype(jnp.bfloat16)
+        return new_p.astype(p.dtype), m_f, v_f
+
+    # Giant stacked leaves (scan-over-layers expert/projection stacks) are
+    # updated via lax.map over the leading layer axis so the f32 m/v/update
+    # temporaries are per-layer-slice, not per-leaf. Small leaves stay
+    # whole-leaf: XLA aliases those updates in place, and chunking THEM
+    # loses that aliasing.
+    _CHUNK_ELEMS = 2_000_000_000  # global elements (~>100MB/device f32 on 256)
+
+    def upd(p, g, m, v):
+        if p.ndim >= 3 and p.size > _CHUNK_ELEMS:
+            return jax.lax.map(lambda a: upd_slice(*a), (p, g, m, v))
+        return upd_slice(p, g, m, v)
+
+    is_leaf = _is_qleaf
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.flatten(opt_state["m"], is_leaf=is_leaf)[0]
+    flat_v = jax.tree.flatten(opt_state["v"], is_leaf=is_leaf)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,74 @@
+"""Training step factory: loss + grad + AdamW under pjit, with microbatch
+gradient accumulation, mixed precision, and optional cross-pod gradient
+compression (train/grad_compress.py).
+
+``make_train_step(model, opt_cfg, accum_steps)`` returns a pure
+``train_step(state, batch) -> (state, metrics)`` suitable for
+``jax.jit(..., donate_argnums=0)`` with sharding trees from
+``parallel.sharding``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+PyTree = Any
+
+
+def make_train_state(model, key, opt_cfg: OptConfig) -> Dict[str, PyTree]:
+    params = model.init(key)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg), "rng": key}
+
+
+def make_train_step(model, opt_cfg: OptConfig, *, accum_steps: int = 1, grad_transform=None):
+    """grad_transform: optional (grads, carry) -> (grads, carry) hook, e.g.
+    compressed cross-pod reduction with error feedback."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def train_step(state: Dict[str, PyTree], batch: Dict[str, jnp.ndarray]):
+        params = state["params"]
+
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            # microbatch accumulation: split batch leading dim into chunks
+            def micro(acc, mb):
+                (l, mets), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc_g, g)
+                return (acc_g, acc_l + l), mets
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            # accumulate grads in f32 for fp32 masters, bf16 for bf16 masters
+            # (the low-memory recipe used by the >200B configs)
+            acc_dt = lambda p: jnp.float32 if p.dtype == jnp.float32 else jnp.bfloat16
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt(p)), params)
+            (grads, loss_sum), mets = jax.lax.scan(micro, (zero_g, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            metrics = jax.tree.map(lambda m: m[-1], mets)
+
+        carry = state.get("grad_carry")
+        if grad_transform is not None:
+            grads, carry = grad_transform(grads, carry)
+
+        new_params, new_opt, opt_metrics = adamw_update(params, grads, state["opt"], opt_cfg)
+        new_state = {"params": new_params, "opt": new_opt, "rng": state["rng"]}
+        if carry is not None:
+            new_state["grad_carry"] = carry
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,17 @@
+import os
+import sys
+
+# repo root on sys.path so `import benchmarks.*` works regardless of how
+# pytest was invoked (the brief's final command sets PYTHONPATH=src only)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+# Tests run on the single real CPU device. Multi-device mesh tests spawn
+# subprocesses with their own XLA_FLAGS (tests/_mesh_checks.py) — the brief
+# forbids forcing a host device count globally.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,22 @@
+"""Multi-device behaviour (COM collectives, grad compression, sharded train
+step, elastic restore) — executed in a subprocess with 8 host devices so the
+main pytest process keeps the real single-device view."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(560)
+def test_mesh_checks_subprocess():
+    script = os.path.join(os.path.dirname(__file__), "_mesh_checks.py")
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    proc = subprocess.run(
+        [sys.executable, script], capture_output=True, text=True, timeout=540, env=env
+    )
+    sys.stdout.write(proc.stdout[-3000:])
+    sys.stderr.write(proc.stderr[-2000:])
+    assert proc.returncode == 0
+    assert "ALL MESH CHECKS PASSED" in proc.stdout

@@ -1,0 +1,47 @@
+"""Deliverable (e)/(g) gate: every dry-run cell compiled, artifacts carry
+memory/cost analysis + roofline terms, and multi-pod actually uses the pod
+axis (batch sharded 32-way)."""
+import glob
+import json
+import os
+
+import pytest
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+CELLS = sorted(glob.glob(os.path.join(DRYRUN, "*pod.json")))
+
+
+@pytest.mark.skipif(not CELLS, reason="run repro.launch.dryrun_all first")
+def test_all_cells_compiled_ok():
+    bad = []
+    for path in CELLS:
+        r = json.load(open(path))
+        if not r.get("ok"):
+            bad.append((os.path.basename(path), r.get("error", "?")[:100]))
+    assert not bad, bad
+    # 32 cells per mesh (10 archs x 3 shapes + 2 long-context archs)
+    one = [p for p in CELLS if p.endswith("__1pod.json")]
+    two = [p for p in CELLS if p.endswith("__2pod.json")]
+    assert len(one) >= 32 and len(two) >= 32
+
+
+@pytest.mark.skipif(not CELLS, reason="run repro.launch.dryrun_all first")
+def test_artifacts_have_roofline_terms():
+    for path in CELLS:
+        r = json.load(open(path))
+        if not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        for k in ("compute_s", "memory_s", "collective_s", "dominant", "model_flops_global"):
+            assert k in rf, (path, k)
+        assert "memory_analysis" in r and "cost_analysis" in r
+        assert r["hlo_analysis"]["collective_bytes_total"] >= 0
+
+
+@pytest.mark.skipif(not CELLS, reason="run repro.launch.dryrun_all first")
+def test_multi_pod_mesh_really_multi_pod():
+    twos = [json.load(open(p)) for p in CELLS if p.endswith("__2pod.json")]
+    assert twos
+    for r in twos:
+        assert r["devices"] == 512 and r["mesh"].get("pod") == 2

@@ -1,0 +1,92 @@
+"""Domino ISA (paper Tab. I/II): encode/decode roundtrip + schedule periods."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.isa import Buf, CInstr, Dir, Func, MInstr, ScheduleTable, decode
+from repro.core.mapping import ConvSpec
+from repro.core.schedule import (
+    compile_conv_tile,
+    compile_fc_tile,
+    compile_last_row_mtype,
+    compile_layer,
+    conv_period,
+    pool_period,
+)
+
+dirs = st.integers(0, 31).map(Dir)
+tx_dirs = st.integers(0, 15).map(Dir)
+sums = st.integers(0, 15).map(lambda v: __import__("repro.core.isa", fromlist=["Sum"]).Sum(v))
+
+
+@given(rx=dirs, s=st.integers(0, 15), b=st.sampled_from(list(Buf)), tx=tx_dirs)
+@settings(max_examples=100, deadline=None)
+def test_ctype_roundtrip(rx, s, b, tx):
+    from repro.core.isa import Sum
+
+    i = CInstr(rx=rx, sum=Sum(s), buf=b, tx=tx)
+    word = i.encode()
+    assert 0 <= word < 1 << 16 and word & 1 == 0  # 16-bit, C-type
+    d = decode(word)
+    assert d == i
+
+
+@given(rx=dirs, f=st.sampled_from(list(Func)), tx=tx_dirs)
+@settings(max_examples=100, deadline=None)
+def test_mtype_roundtrip(rx, f, tx):
+    i = MInstr(rx=rx, func=f, tx=tx)
+    word = i.encode()
+    assert word & 1 == 1  # M-type
+    assert decode(word) == i
+
+
+def test_schedule_table_capacity():
+    instrs = [CInstr()] * 128
+    ScheduleTable(instrs)  # exactly the 16b x 128 of Tab. III
+    with pytest.raises(ValueError):
+        ScheduleTable([CInstr()] * 129)
+
+
+@given(w=st.integers(4, 64), p=st.integers(0, 3), sp=st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_periods_match_paper_formulas(w, p, sp):
+    layer = ConvSpec("l", 3, 8, 8, w, w, padding=p, pool_k=2, pool_stride=sp)
+    assert conv_period(layer) == 2 * (p + w)        # p = 2(P+W), §II-C
+    assert pool_period(layer) == 2 * sp             # p = 2·S_p
+
+
+def test_conv_tile_schedule_periodicity():
+    layer = ConvSpec("l", 3, 8, 8, 8, 8, padding=1)
+    ts = compile_conv_tile(layer, kpos=4, is_last_row=False)
+    assert ts.table.period == conv_period(layer)
+    # periodic: instruction at cycle c == cycle c + period
+    for c in range(ts.table.period):
+        assert ts.table.at_cycle(c) == ts.table.at_cycle(c + ts.table.period)
+
+
+def test_stride_shielding_fraction():
+    layer = ConvSpec("l", 3, 8, 8, 8, 8, stride=2)
+    ts = compile_conv_tile(layer, 0, False)
+    assert ts.active_frac == 0.25  # shielded bits skip 3 of 4 cycles
+
+
+def test_last_row_mtype_functions():
+    layer = ConvSpec("l", 3, 8, 8, 8, 8, pool_k=2)
+    ts = compile_last_row_mtype(layer)
+    funcs = {i for i in (decode(w) for w in ts.table.words)}
+    kinds = {getattr(i, "func", None) for i in funcs}
+    assert Func.ACT in kinds and Func.CMP in kinds  # activation + max-pool
+
+
+def test_residual_layer_emits_bypass():
+    layer = ConvSpec("l", 3, 8, 8, 8, 8, residual_from="x")
+    ts = compile_last_row_mtype(layer)
+    kinds = {getattr(decode(w), "func", None) for w in ts.table.words}
+    assert Func.BP in kinds  # "skip" connection (Tab. II)
+
+
+def test_compile_layer_shares_schedules():
+    layer = ConvSpec("l", 3, 300, 300, 8, 8)  # cb=2, mb=2
+    scheds = compile_layer(layer)
+    # distinct schedules per kernel position + M-type: K²+1 — NOT per tile
+    # (36 tiles share 10 schedules => tiny instruction bandwidth)
+    assert len(scheds) == 9 + 1

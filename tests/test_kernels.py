@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU), with
+hypothesis sweeps over shapes/dtypes per the brief."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.com_matmul import com_matmul
+from repro.kernels.conv2d_com import conv2d_com
+from repro.kernels.flash_attention import flash_attention, flash_attention_gqa
+
+
+def rtol_for(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@given(
+    m=st.sampled_from([64, 128, 256]),
+    n=st.sampled_from([64, 128]),
+    k=st.sampled_from([64, 128, 384]),
+    bm=st.sampled_from([32, 64, 128]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    act=st.sampled_from([None, "relu", "silu", "gelu"]),
+)
+@settings(max_examples=12, deadline=None)
+def test_com_matmul_sweep(m, n, k, bm, dtype, act):
+    key = jax.random.PRNGKey(m * n + k)
+    x = jax.random.normal(key, (m, k), dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n), dtype)
+    b = jax.random.normal(jax.random.fold_in(key, 2), (n,), dtype)
+    y = com_matmul(x, w, bias=b, activation=act, block_m=bm, interpret=True)
+    yr = ref.com_matmul_ref(x, w, bias=b, activation=act)
+    np.testing.assert_allclose(
+        y.astype(np.float32), yr.astype(np.float32),
+        rtol=rtol_for(dtype), atol=k * (0.05 if dtype == jnp.bfloat16 else 1e-4),
+    )
+
+
+def test_com_matmul_residual_epilogue():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (128, 128))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (128, 128))
+    r = jax.random.normal(jax.random.fold_in(key, 2), (128, 128))
+    y = com_matmul(x, w, residual=r, activation="relu", interpret=True)
+    np.testing.assert_allclose(
+        y, ref.com_matmul_ref(x, w, residual=r, activation="relu"), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(
+    s=st.sampled_from([128, 256]),
+    hd=st.sampled_from([64, 128]),
+    bq=st.sampled_from([64, 128]),
+    bkv=st.sampled_from([64, 128]),
+    causal=st.booleans(),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_sweep(s, hd, bq, bkv, causal, dtype):
+    key = jax.random.PRNGKey(s + hd)
+    q = jax.random.normal(key, (2, s, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, s, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, s, hd), dtype)
+    y = flash_attention(q, k, v, causal=causal, block_q=bq, block_kv=bkv, interpret=True)
+    yr = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        y.astype(np.float32), yr.astype(np.float32),
+        rtol=rtol_for(dtype), atol=0.05 if dtype == jnp.bfloat16 else 1e-5,
+    )
+
+
+def test_flash_gqa_matches_model_oracle():
+    from repro.models.attention import naive_attention
+
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (2, 128, 8, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 128, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 128, 2, 64))
+    y = flash_attention_gqa(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(y, naive_attention(q, k, v, causal=True), rtol=1e-4, atol=1e-5)
+
+
+@given(
+    h=st.sampled_from([8, 12, 16]),
+    w=st.sampled_from([8, 10]),
+    c=st.sampled_from([3, 8, 16]),
+    m=st.sampled_from([8, 32]),
+    k=st.sampled_from([1, 3, 5]),
+    s=st.sampled_from([1, 2]),
+    p=st.integers(0, 2),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+@settings(max_examples=14, deadline=None)
+def test_conv2d_com_sweep(h, w, c, m, k, s, p, dtype):
+    if h + 2 * p < k or w + 2 * p < k:
+        return
+    key = jax.random.PRNGKey(h * w + c)
+    x = jax.random.normal(key, (h, w, c), dtype)
+    wt = jax.random.normal(jax.random.fold_in(key, 1), (k, k, c, m), dtype)
+    y = conv2d_com(x, wt, stride=s, padding=p, interpret=True)
+    yr = ref.conv2d_com_ref(x, wt, stride=s, padding=p)
+    np.testing.assert_allclose(
+        y.astype(np.float32), yr.astype(np.float32),
+        rtol=rtol_for(dtype), atol=0.25 if dtype == jnp.bfloat16 else 1e-4,
+    )
+
+
+def test_ops_wrappers_dispatch():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 64))
+    y_i = ops.com_matmul(x, w, backend="interpret")
+    y_r = ops.com_matmul(x, w, backend="ref")
+    np.testing.assert_allclose(y_i, y_r, rtol=1e-4, atol=1e-4)
+
+
+# ---------------- fused sLSTM kernel ----------------
+
+
+@given(
+    s=st.sampled_from([32, 64]), d=st.sampled_from([32, 64]),
+    h=st.sampled_from([2, 4]), chunk=st.sampled_from([8, 16, 32]),
+)
+@settings(max_examples=8, deadline=None)
+def test_slstm_fused_matches_scan(s, d, h, chunk):
+    from repro.kernels.slstm import slstm_fused
+    from repro.models import xlstm as xl
+
+    key = jax.random.PRNGKey(s + d)
+    B = 2
+    x = jax.random.normal(key, (B, s, d), jnp.float32)
+    params, _ = xl.init_slstm(key, d, h)
+    ref = xl.slstm_forward(params, x, h)
+    gx = (jnp.einsum("bsd,dk->bsk", x, params["wg"]) + params["bg"]).reshape(B, s, 4, d)
+    hs = slstm_fused(gx, params["rg"], h, chunk=chunk, interpret=True)
+    out = jnp.einsum("bsh,hd->bsd", hs, params["wo"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_slstm_traffic_model():
+    from repro.kernels.slstm import hbm_traffic_model
+
+    m = hbm_traffic_model(16, 4096, 1024, 4)
+    assert m["reduction_x"] > 10  # the kernel's raison d'etre

@@ -1,0 +1,100 @@
+"""COM dataflow simulator: exactness vs reference conv + analytic==cycle-sim
+event counts (hypothesis over layer shapes) + Tab. IV reproduction bands."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.energy import COUNTERPARTS, PAPER_DOMINO
+from repro.core.mapping import NETWORKS, ConvSpec, FCSpec, map_network, tiles_for, total_chips
+from repro.core.simulator import (
+    COMGridSim,
+    DominoModel,
+    conv_events,
+    fc_events,
+    reference_conv,
+)
+
+
+@given(
+    h=st.integers(4, 12), w=st.integers(4, 12),
+    c=st.integers(1, 12), m=st.integers(1, 12),
+    k=st.sampled_from([1, 3, 5]), s=st.sampled_from([1, 2]),
+    p=st.integers(0, 2),
+)
+@settings(max_examples=25, deadline=None)
+def test_com_grid_sim_computes_exact_conv(h, w, c, m, k, s, p):
+    if h + 2 * p < k or w + 2 * p < k:
+        return
+    rng = np.random.default_rng(0)
+    layer = ConvSpec("t", k, c, m, h, w, stride=s, padding=p)
+    wts = rng.normal(size=(k, k, c, m))
+    x = rng.normal(size=(h, w, c))
+    sim = COMGridSim(layer, wts)
+    out = sim.run(x)
+    ref = reference_conv(x, wts, layer)
+    np.testing.assert_allclose(out, ref, rtol=1e-10, atol=1e-10)
+
+
+@given(
+    h=st.integers(4, 10), w=st.integers(4, 10),
+    c=st.integers(1, 8), m=st.integers(1, 8), k=st.sampled_from([1, 3]),
+)
+@settings(max_examples=20, deadline=None)
+def test_analytic_events_match_cycle_sim(h, w, c, m, k):
+    if h < k or w < k:
+        return
+    rng = np.random.default_rng(1)
+    layer = ConvSpec("t", k, c, m, h, w, stride=1, padding=1)
+    sim = COMGridSim(layer, rng.normal(size=(k, k, c, m)))
+    sim.run(rng.normal(size=(h, w, c)))
+    a = conv_events(layer)
+    for f in ("ps_hops", "ps_bits", "ifm_hops", "ifm_bits", "adds",
+              "buf_push", "buf_pop", "act", "pe_macs", "cycles"):
+        assert getattr(a, f) == getattr(sim.ev, f), f
+
+
+def test_group_sum_queue_is_bounded():
+    """Group-sums wait in *bounded* ROFM buffers (16KiB => 64 vectors)."""
+    layer = ConvSpec("t", 3, 8, 8, 12, 12)
+    sim = COMGridSim(layer, np.random.default_rng(2).normal(size=(3, 3, 8, 8)))
+    sim.run(np.random.default_rng(3).normal(size=(12, 12, 8)))
+    assert sim.max_queue_depth <= 64
+
+
+def test_tile_allocation_formula():
+    conv = ConvSpec("c", 3, 300, 520, 8, 8)
+    n, grid = tiles_for(conv)
+    assert grid == (9, 2, 3) and n == 9 * 2 * 3  # K²·ceil(C/Nc)·ceil(M/Nm)
+    fc = FCSpec("f", 4096, 4096)
+    n, grid = tiles_for(fc)
+    assert n == 16 * 16
+
+
+def test_network_mapping_chips():
+    for name, make in NETWORKS.items():
+        allocs = map_network(make())
+        chips = total_chips(allocs)
+        assert chips >= 1
+        assert sum(a.n_tiles for a in allocs) > 0
+
+
+@pytest.mark.parametrize("key", list(COUNTERPARTS))
+def test_table_iv_reproduction_bands(key):
+    """Our simulated Domino vs the paper's Tab. IV Domino column."""
+    import benchmarks.table_iv as t4
+
+    rows = {r["counterpart"]: r for r in t4.run()}
+    r = rows[key]
+    # CE within 25% of the paper's value per column
+    assert r["ours_ce"] == pytest.approx(r["paper_ce"], rel=0.25)
+    # off-chip power stays a small fraction (paper: 0.1%-3%)
+    assert r["ours_offchip_w"] < 0.1 * max(r["ours_power_w"], 1e-9)
+
+
+def test_headline_ce_band():
+    import benchmarks.table_iv as t4
+
+    rows = t4.run()
+    imps = [r["ce_improvement"] for r in rows]
+    # paper: 1.77-2.37x; accept our reproduction in the 1.3-2.6x band
+    assert min(imps) > 1.3 and max(imps) < 2.6
