@@ -24,7 +24,9 @@ _CHILD = textwrap.dedent(
     from repro.parallel.collectives import matmul_strategy, wire_bytes
     from repro.launch.hlo_analysis import analyze_hlo
 
-    mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core import jax_compat
+
+    mesh = jax_compat.make_mesh((8,), ("model",))
     M, K, N = 256, 4096, 2048
     x = jnp.ones((M, K), jnp.bfloat16)
     w = jnp.ones((K, N), jnp.bfloat16)

@@ -1,0 +1,120 @@
+"""Design-space sweep benchmark: the CI perf artifact.
+
+Evaluates a grid of scenarios (network x chip count x precision x CIM-array
+energy) through the batched sweep engine, cross-checks every Tab. IV column
+against per-scenario ``DominoModel.evaluate`` (1e-9), and emits machine-
+readable JSON including the sweep's own wall-clock.
+
+Default grid: 4 networks x 4 chip counts x 2 precisions x 2 e_mac points
+= 64 scenarios.
+
+    PYTHONPATH=src python benchmarks/sweep.py --out sweep-results.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.core.mapping import NETWORKS
+from repro.sweep import COLUMNS, SweepGrid, SweepValidationError, run_sweep
+from repro.sweep.engine import evaluate_scenario
+
+# substituted CIM energy points (pJ / 8b OP at 45nm/1V): the span of the
+# Tab. IV counterparts' implied e_mac (benchmarks/table_iv.py)
+DEFAULT_E_MAC_PJ = (0.02, 0.1)
+DEFAULT_CHIPS = (5, 6, 10, 20)
+DEFAULT_PRECISIONS = (8, 16)
+
+
+def default_grid() -> SweepGrid:
+    return SweepGrid(
+        networks=tuple(NETWORKS),
+        chip_counts=DEFAULT_CHIPS,
+        precisions=DEFAULT_PRECISIONS,
+        e_mac_pj=DEFAULT_E_MAC_PJ,
+    )
+
+
+def check_against_scalar(result, rtol: float = 1e-9) -> float:
+    """Max relative error of the batched engine vs the scalar oracle."""
+    worst = 0.0
+    for i, s in enumerate(result.scenarios):
+        ref = evaluate_scenario(s)
+        for c in COLUMNS:
+            got, want = float(result.columns[c][i]), float(ref[c])
+            err = abs(got - want) / max(abs(want), 1e-300)
+            worst = max(worst, err)
+            if err > rtol:
+                raise AssertionError(
+                    f"batched/scalar mismatch on {c} for {s}: "
+                    f"{got!r} vs {want!r} (rel err {err:.3e})"
+                )
+    return worst
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--networks", nargs="*", default=None,
+                    help="network names (default: the four Tab. IV CNNs)")
+    ap.add_argument("--chips", nargs="*", type=int, default=None,
+                    help=f"chip counts (default: {list(DEFAULT_CHIPS)})")
+    ap.add_argument("--precisions", nargs="*", type=int, default=None,
+                    help=f"bit-widths (default: {list(DEFAULT_PRECISIONS)})")
+    ap.add_argument("--e-mac", nargs="*", type=float, default=None,
+                    help=f"CIM pJ/OP points (default: {list(DEFAULT_E_MAC_PJ)})")
+    ap.add_argument("--out", default=None,
+                    help="write JSON here (default: stdout)")
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip the per-scenario scalar cross-check")
+    args = ap.parse_args(argv)
+
+    base = default_grid()
+    try:
+        grid = SweepGrid(
+            networks=tuple(args.networks) if args.networks else base.networks,
+            chip_counts=tuple(args.chips) if args.chips else base.chip_counts,
+            precisions=tuple(args.precisions) if args.precisions else base.precisions,
+            e_mac_pj=tuple(args.e_mac) if args.e_mac else base.e_mac_pj,
+        )
+    except SweepValidationError as e:
+        ap.error(str(e))
+
+    t0 = time.perf_counter()
+    result = run_sweep(grid)
+    wall_s = time.perf_counter() - t0
+
+    payload = result.as_dict()
+    payload["wall_s"] = wall_s
+    payload["scenarios_per_s"] = result.n_scenarios / max(wall_s, 1e-12)
+    if not args.no_check:
+        t1 = time.perf_counter()
+        payload["check_max_rel_err"] = check_against_scalar(result)
+        payload["check_wall_s"] = time.perf_counter() - t1
+
+    # headline summary for humans on stderr (JSON stays machine-readable)
+    ce = result.columns["ce_tops_w"]
+    print(
+        f"swept {result.n_scenarios} scenarios in {wall_s * 1e3:.1f} ms "
+        f"({payload['scenarios_per_s']:.0f}/s); CE {np.min(ce):.2f}-"
+        f"{np.max(ce):.2f} TOPS/W"
+        + ("" if args.no_check
+           else f"; batched==scalar (max rel err {payload['check_max_rel_err']:.2e})"),
+        file=sys.stderr,
+    )
+
+    text = json.dumps(payload, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,7 +22,9 @@ CHILD = textwrap.dedent("""
     from repro.parallel.collectives import matmul_strategy
     from repro.launch.hlo_analysis import analyze_hlo
 
-    mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core import jax_compat
+
+    mesh = jax_compat.make_mesh((8,), ("model",))
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (64, 512), jnp.float32)
     w = jax.random.normal(jax.random.fold_in(key, 1), (512, 256), jnp.float32)

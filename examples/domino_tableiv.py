@@ -35,6 +35,10 @@ model = DominoModel(net)
 print(f"VGG-11: {model.n_tiles} tiles, {model.n_chips} chip(s) minimum; "
       f"exec latency {model.exec_time_us():.1f} us")
 
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.table_iv import implied_e_mac_pj
 
 ours = model.evaluate(implied_e_mac_pj("jia_isscc21"), n_chips=5, area_mm2=343.2)

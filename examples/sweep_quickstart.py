@@ -1,0 +1,34 @@
+"""Minimal sweep-engine walkthrough.
+
+Builds a small validated grid, runs the batched engine, and prints a
+Tab. IV-style table — including an ``llm:`` bridge network to show the
+sweep covering the repo's LLM configs.
+
+    PYTHONPATH=src python examples/sweep_quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.sweep import SweepGrid, SweepValidationError, run_sweep  # noqa: E402
+
+grid = SweepGrid(
+    networks=("vgg11-cifar", "resnet18-cifar", "llm:smollm-135m"),
+    chip_counts=(5, 10),
+    precisions=(8,),
+    e_mac_pj=(0.02, 0.1),
+)
+result = run_sweep(grid)
+
+print(f"{'network':18s} {'chips':>5s} {'e_mac':>6s} | {'img/s':>10s} "
+      f"{'power W':>8s} {'CE TOPS/W':>9s}")
+for r in result.rows():
+    print(f"{r['network']:18s} {int(r['n_chips']):5d} {r['e_mac_pj']:6.2f} | "
+          f"{r['img_s']:10.0f} {r['power_w']:8.2f} {r['ce_tops_w']:9.2f}")
+print(f"\n{result.n_scenarios} scenarios in {result.engine_wall_s * 1e3:.2f} ms")
+
+# validation-first: malformed grids never reach the engine
+try:
+    SweepGrid(networks=("vgg99-nope",), chip_counts=(0,), e_mac_pj=(-1.0,))
+except SweepValidationError as e:
+    print(f"\nrejected upfront, as designed:\n{e}")

@@ -1,0 +1,1 @@
+"""Domino NoC reproduction package."""

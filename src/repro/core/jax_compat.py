@@ -1,0 +1,49 @@
+"""JAX version portability shims.
+
+The repro package targets the modern mesh/shard_map API (``jax.shard_map``
+with ``check_vma``, ``jax.make_mesh(..., axis_types=...)``) but must also run
+on jax 0.4.x where those spell ``jax.experimental.shard_map.shard_map`` with
+``check_rep`` and ``jax.make_mesh`` has no ``axis_types`` parameter. All mesh
+construction and shard_map entry points in the repo route through here so the
+skew lives in exactly one file.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+
+try:  # jax >= 0.5: explicit axis types on the mesh
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # jax 0.4.x
+    _AxisType = None
+
+_HAS_TOPLEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if _AxisType is not None:
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names),
+            axis_types=(_AxisType.Auto,) * len(tuple(axis_names)),
+        )
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def shard_map(f: Any, *, mesh: Any, in_specs: Any, out_specs: Any) -> Any:
+    """``jax.shard_map`` without replication checking, on any supported jax.
+
+    ``check_vma=False`` (new) and ``check_rep=False`` (0.4.x) are the same
+    knob: the COM collectives intentionally produce per-device values the
+    checker cannot prove replicated.
+    """
+    if _HAS_TOPLEVEL_SHARD_MAP:
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )

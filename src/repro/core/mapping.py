@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Dict, List, Optional, Tuple
 
 N_C = 256  # CIM rows
@@ -70,12 +71,14 @@ class FCSpec:
 LayerSpec = "ConvSpec | FCSpec"
 
 
-@dataclass
+@dataclass(frozen=True)
 class TileAlloc:
+    """Immutable: instances are shared through ``map_network_cached``."""
+
     layer: LayerSpec
     n_tiles: int
     grid: Tuple[int, int, int]      # (K², c_blocks, m_blocks) — conv
-    chip_ids: List[int] = field(default_factory=list)
+    chip_ids: Tuple[int, ...] = ()
     crosses_chip: bool = False
 
 
@@ -108,10 +111,20 @@ def map_network(layers: List, tiles_per_chip: int = TILES_PER_CHIP) -> List[Tile
             used += take
             left -= take
         allocs.append(
-            TileAlloc(layer=layer, n_tiles=n, grid=grid, chip_ids=chips,
+            TileAlloc(layer=layer, n_tiles=n, grid=grid, chip_ids=tuple(chips),
                       crosses_chip=len(set(chips)) > 1 or chips[0] != start_chip)
         )
     return allocs
+
+
+@lru_cache(maxsize=None)
+def map_network_cached(layers: Tuple, tiles_per_chip: int = TILES_PER_CHIP) -> Tuple[TileAlloc, ...]:
+    """``map_network`` memoized on the (hashable) layer-spec tuple.
+
+    Repeated scenarios over the same network — the sweep engine's common
+    case — get their allocation for free. Safe to share: TileAlloc is frozen.
+    """
+    return tuple(map_network(list(layers), tiles_per_chip))
 
 
 def total_chips(allocs: List[TileAlloc]) -> int:

@@ -18,6 +18,7 @@ them directly, and tests assert the periods against the paper's formulas.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Dict, List, Tuple
 
 from repro.core.isa import Buf, CInstr, Dir, Func, MInstr, ScheduleTable, Sum
@@ -31,8 +32,14 @@ class TileSchedule:
     active_frac: float        # fraction of cycles with real work (stride shield)
 
 
+def conv_period_cols(padding, w_in):
+    """Vectorized ``conv_period``: p = 2(P+W) over scalar or column arrays —
+    the single source of the schedule-period formula."""
+    return 2 * (padding + w_in)
+
+
 def conv_period(layer: ConvSpec) -> int:
-    return 2 * (layer.padding + layer.w_in)
+    return int(conv_period_cols(layer.padding, layer.w_in))
 
 
 def pool_period(layer: ConvSpec) -> int:
@@ -103,9 +110,15 @@ def compile_fc_tile(layer: FCSpec, row: int, n_rows: int) -> TileSchedule:
     )
 
 
+@lru_cache(maxsize=None)
 def compile_layer(layer) -> Dict[str, TileSchedule]:
     """All distinct tile schedules of one layer (tiles sharing a role share
-    a schedule — this is what keeps NoC instruction bandwidth tiny)."""
+    a schedule — this is what keeps NoC instruction bandwidth tiny).
+
+    Memoized on the frozen layer spec: recompiling the same layer — e.g.
+    across sweep scenarios or network replicas — returns the cached tables.
+    Callers must treat the returned dict as read-only.
+    """
     out: Dict[str, TileSchedule] = {}
     if isinstance(layer, ConvSpec):
         k2 = layer.k * layer.k

@@ -28,6 +28,7 @@ from __future__ import annotations
 import math
 from collections import defaultdict
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -42,10 +43,16 @@ from repro.core.mapping import (
     FCSpec,
     TileAlloc,
     map_network,
+    map_network_cached,
     tiles_for,
     total_chips,
 )
-from repro.core.schedule import compile_conv_tile, compile_last_row_mtype, conv_period
+from repro.core.schedule import (
+    compile_conv_tile,
+    compile_last_row_mtype,
+    conv_period,
+    conv_period_cols,
+)
 
 FDM_FACTOR = 16
 PIPELINE_EFF = 0.60
@@ -95,6 +102,12 @@ class COMGridSim:
         partial sums travel the kernel-row chain (E direction), group-sums
         queue in the row-end tile's buffer and add on the move (S direction),
         exactly the Fig. 3 pipeline; event counts mirror the data movement.
+
+        The (ox, kr, kc) inner chains are evaluated as one einsum per output
+        row — every (ox, kr, kc) MAC of the row fires at once and the psum /
+        group-sum additions reduce over the kc then kr axes, so the outputs
+        and event counts are identical to the elementwise chain walk while
+        running orders of magnitude faster.
         """
         L = self.layer
         K, P, S = L.k, L.padding, L.stride
@@ -102,47 +115,45 @@ class COMGridSim:
         Ho, Wo, M = L.h_out, L.w_out, L.c_out
         x = np.pad(ifm.astype(np.float64), ((P, P), (P, P), (0, 0)))
         out = np.zeros((Ho, Wo, M))
-        # group-sum queues of the k-row-end tiles (bounded ROFM buffers)
-        queues: List[List[np.ndarray]] = [[] for _ in range(K)]
-        max_depth = 0
+        m_bits = min(M, 256) * 8
+        # gather index: patch column of (ox, kc) inside a padded IFM row
+        col_idx = np.arange(Wo)[:, None] * S + np.arange(K)[None, :]
 
         for oy in range(Ho):
             # every output row is one schedule period p = 2(P+W)
             self.ev.cycles += conv_period(L)
-            for ox in range(Wo):
-                gsums = []
-                for kr in range(K):
-                    psum = np.zeros(M)
-                    for kc in range(K):
-                        # PE MAC at tile (kr,kc): N_C x N_M crossbar fire
-                        contrib = x[oy * S + kr, ox * S + kc, :] @ self.w[kr, kc]
-                        self.ev.pe_macs += 1
-                        psum = psum + contrib
-                        self.ev.adds += 1
-                        self.ev.ps_hops += 1
-                        self.ev.ps_bits += min(M, 256) * 8  # forward along kernel row (E)
-                    # row end: queue group-sum (WR_BUF/PUSH), await peers
-                    queues[kr].append(psum)
-                    self.ev.buf_push += 1
-                    gsums.append(psum)
-                # group-sums combine while moving down (S) the K row-end tiles
-                total = queues[0].pop(0)
-                self.ev.buf_pop += 1
-                for kr in range(1, K):
-                    total = total + queues[kr].pop(0)
-                    self.ev.adds += 1
-                    self.ev.ps_hops += 1
-                    self.ev.ps_bits += min(M, 256) * 8
-                    self.ev.buf_pop += 1
-                max_depth = max(max_depth, max(len(q) for q in queues) + 1)
-                # last tile: M-type activation
-                out[oy, ox] = np.maximum(total, 0.0)
-                self.ev.act += 1
+            # rows[kr, xw, c] holds the K padded IFM rows feeding output row
+            # oy; patches[kr, ox, kc, c] is the (ox, kr, kc) MAC operand grid
+            rows = x[oy * S : oy * S + K]
+            patches = rows[:, col_idx, :]
+            # PE MACs + kernel-row psum chain (E) + group-sum chain (S):
+            # reduce kc within each kernel row, then kr down the row-end tiles
+            total = np.einsum("rxkc,rkcm->xm", patches, self.w)
+            # last tile: M-type activation
+            out[oy] = np.maximum(total, 0.0)
+            # event counts per output row, read off the einsum operands that
+            # actually fired (n_win output steps x n_rows x n_cols MAC grid);
+            # the reduction tree adds n_cols per row chain + (n_rows-1) for
+            # the S-direction group-sum combine
+            n_rows_k, n_win, n_cols = patches.shape[0], patches.shape[1], patches.shape[2]
+            chain_adds = n_win * (n_rows_k * n_cols + n_rows_k - 1)
+            self.ev.pe_macs += n_win * n_rows_k * n_cols
+            self.ev.adds += chain_adds
+            self.ev.ps_hops += chain_adds
+            self.ev.ps_bits += chain_adds * m_bits
+            # row end: every kernel row queues one group-sum (WR_BUF/PUSH)
+            # which the S-direction combine pops in the same output step
+            self.ev.buf_push += n_win * n_rows_k
+            self.ev.buf_pop += n_win * n_rows_k
+            self.ev.act += n_win
             # IFM streaming: each input row segment visits the K² chain once
             # per output row (in-buffer shift gives K-row reuse)
             self.ev.ifm_hops += K * K * (W + 2 * P)
             self.ev.ifm_bits += K * K * (W + 2 * P) * min(C, 256) * 8
-        self.max_queue_depth = max_depth
+        # the bounded ROFM queues hold at most one group-sum per kernel row:
+        # each output step pushes K and pops K (same invariant the chain walk
+        # observed via max(len(queue)) + 1)
+        self.max_queue_depth = 1 if (Ho > 0 and Wo > 0) else 0
         return out
 
 
@@ -159,46 +170,171 @@ def reference_conv(ifm: np.ndarray, w: np.ndarray, layer: ConvSpec) -> np.ndarra
 
 
 # ---------------------------------------------------------------------------
-# 2. Analytic event counts + energy/power/CE for full networks
+# 2. Analytic event counts — vectorized closed forms over layer batches
 # ---------------------------------------------------------------------------
+
+EVENT_FIELDS: Tuple[str, ...] = tuple(Events.__dataclass_fields__)
+
+
+@dataclass(frozen=True)
+class LayerTable:
+    """Columnar (n_layers,) int64 feature arrays for a layer sequence.
+
+    The batched event engine evaluates every per-layer closed form over these
+    arrays in one shot (FC rows carry zeros in the conv-only columns); the
+    scalar ``conv_events``/``fc_events`` API is a one-row view of the same
+    path, so cycle-sim cross-validation covers both.
+    """
+
+    is_conv: np.ndarray
+    k: np.ndarray
+    c_in: np.ndarray
+    c_out: np.ndarray
+    h_out: np.ndarray
+    w_out: np.ndarray
+    w_in: np.ndarray
+    padding: np.ndarray
+    pool_k: np.ndarray
+    pool_stride: np.ndarray
+    ops: np.ndarray
+
+    @property
+    def n_layers(self) -> int:
+        return int(self.is_conv.shape[0])
+
+
+@lru_cache(maxsize=None)
+def layer_table(layers: Tuple) -> LayerTable:
+    """Build (and cache, keyed by the frozen layer specs) the feature table."""
+    def col(conv_val, fc_val):
+        return np.array(
+            [conv_val(l) if isinstance(l, ConvSpec) else fc_val(l) for l in layers],
+            dtype=np.int64,
+        )
+
+    return LayerTable(
+        is_conv=np.array([isinstance(l, ConvSpec) for l in layers], dtype=bool),
+        k=col(lambda l: l.k, lambda l: 0),
+        c_in=col(lambda l: l.c_in, lambda l: l.c_in),
+        c_out=col(lambda l: l.c_out, lambda l: l.c_out),
+        h_out=col(lambda l: l.h_out, lambda l: 0),
+        w_out=col(lambda l: l.w_out, lambda l: 0),
+        w_in=col(lambda l: l.w_in, lambda l: 0),
+        padding=col(lambda l: l.padding, lambda l: 0),
+        pool_k=col(lambda l: l.pool_k, lambda l: 0),
+        pool_stride=col(lambda l: l.pool_stride, lambda l: 1),
+        ops=col(lambda l: l.ops, lambda l: l.ops),
+    )
+
+
+def batched_layer_events(t: LayerTable) -> Dict[str, np.ndarray]:
+    """Per-layer event counts, (n_layers,) int64 per Events field.
+
+    Same closed forms the scalar API always used — validated against
+    COMGridSim — just evaluated as NumPy array expressions over the whole
+    layer batch instead of a Python loop per layer.
+    """
+    conv = t.is_conv
+    K = t.k
+    K2 = K * K
+    cb = -(-t.c_in // N_C)                 # ceil-div
+    mb = -(-t.c_out // N_M)
+    px = t.h_out * t.w_out
+    chains = cb * mb                       # parallel accumulation chains
+    m_bits = np.minimum(t.c_out, N_M) * 8
+    c_bits = np.minimum(t.c_in, N_C) * 8
+    conv_hops = px * chains * (K2 + K - 1) + px * mb * (cb - 1)
+    fc_hops = mb * (cb - 1) + mb           # column accumulation + egress
+    ps_hops = np.where(conv, conv_hops, fc_hops)
+    ifm_hops = np.where(conv, t.h_out * K2 * (t.w_in + 2 * t.padding) * cb, cb * mb)
+    ev = dict(
+        ps_hops=ps_hops,
+        ps_bits=ps_hops * m_bits,
+        ifm_hops=ifm_hops,
+        ifm_bits=ifm_hops * c_bits,
+        adds=np.where(conv, conv_hops, mb * (cb - 1)),
+        buf_push=np.where(conv, px * chains * K, 0),
+        buf_pop=np.where(conv, px * chains * K, 0),
+        act=np.where(conv, px * mb, mb),
+        pool_cmp=np.where(
+            conv & (t.pool_k > 0),
+            (px // np.maximum(t.pool_stride ** 2, 1)) * t.pool_k ** 2 * mb,
+            0,
+        ),
+        pe_macs=np.where(conv, px * K2 * chains, cb * mb),
+        cycles=np.where(conv, t.h_out * conv_period_cols(t.padding, t.w_in), cb + 2),
+    )
+    return ev
+
+
+@lru_cache(maxsize=None)
+def network_event_totals(layers: Tuple) -> Dict[str, int]:
+    """Summed per-image event counts for a layer tuple (cached)."""
+    per_layer = batched_layer_events(layer_table(layers))
+    return {f: int(per_layer[f].sum()) for f in EVENT_FIELDS}
+
+
+def events_for_layers(layers) -> Events:
+    return Events(**network_event_totals(tuple(layers)))
 
 
 def conv_events(layer: ConvSpec) -> Events:
-    """Closed-form per-image event counts — validated vs COMGridSim."""
-    ev = Events()
-    K = layer.k
-    cb = math.ceil(layer.c_in / N_C)
-    mb = math.ceil(layer.c_out / N_M)
-    px = layer.h_out * layer.w_out
-    chains = cb * mb                       # parallel accumulation chains
-    ev.pe_macs = px * K * K * chains
-    ev.ps_hops = px * chains * (K * K + K - 1) + px * mb * (cb - 1)
-    m_bits = min(layer.c_out, N_M) * 8
-    ev.ps_bits = ev.ps_hops * m_bits
-    ev.adds = px * chains * (K * K + K - 1) + px * mb * (cb - 1)
-    ev.buf_push = px * chains * K
-    ev.buf_pop = px * chains * K
-    ev.ifm_hops = layer.h_out * K * K * (layer.w_in + 2 * layer.padding) * cb
-    ev.ifm_bits = ev.ifm_hops * min(layer.c_in, N_C) * 8
-    ev.act = px * mb
-    ev.pool_cmp = (px // max(layer.pool_stride**2, 1)) * (layer.pool_k**2) * mb if layer.pool_k else 0
-    ev.cycles = layer.h_out * conv_period(layer)
-    return ev
+    """Closed-form per-image event counts — validated vs COMGridSim.
+
+    Thin scalar wrapper over the batched path (one-row LayerTable).
+    """
+    return events_for_layers((layer,))
 
 
 def fc_events(layer: FCSpec) -> Events:
-    ev = Events()
-    cb = math.ceil(layer.c_in / N_C)
-    mb = math.ceil(layer.c_out / N_M)
-    ev.pe_macs = cb * mb
-    ev.ps_hops = mb * (cb - 1) + mb  # column accumulation + egress
-    ev.ps_bits = ev.ps_hops * min(layer.c_out, N_M) * 8
-    ev.ifm_hops = cb * mb
-    ev.ifm_bits = cb * mb * min(layer.c_in, N_C) * 8
-    ev.adds = mb * (cb - 1)
-    ev.act = mb
-    ev.cycles = cb + 2
-    return ev
+    return events_for_layers((layer,))
+
+
+def onchip_pj_from_events(ev: Dict[str, "np.ndarray | int | float"]):
+    """Tab. III on-chip energy (pJ) from event counts.
+
+    Accepts scalars or broadcastable NumPy arrays, so the same expression
+    serves the scalar ``DominoModel`` API and the batched sweep engine.
+    """
+    # partial-sum movement: wormhole pass-through — wire/register energy
+    # per bit-hop + the ROFM adder on arrival (no per-chunk buffering)
+    pj = ev["ps_bits"] * LINK_PJ_PER_BIT
+    pj = pj + ev["adds"] * N_M * E.ADDER_PJ_8B
+    # control + schedule-table read per executed instruction (per hop;
+    # clock-gated when no packet in flight)
+    pj = pj + (ev["ps_hops"] + ev["ifm_hops"]) * (
+        E.ROFM_CTRL_PJ + E.RIFM_CTRL_PJ + E.SCHED_TABLE_PJ
+    )
+    # IFM streaming: wire energy per hop + one RIFM 256B buffer access
+    # per K-row reuse window (in-buffer shifting, paper §II-B)
+    pj = pj + ev["ifm_bits"] * LINK_PJ_PER_BIT
+    pj = pj + (ev["ifm_hops"] / 3.0) * E.RIFM_BUFFER_PJ
+    # group-sum queueing in the 16KiB ROFM data buffer
+    pj = pj + (ev["buf_push"] + ev["buf_pop"]) * E.DATA_BUFFER_PJ
+    # inter-memory computing (Tab. II functions)
+    pj = pj + ev["act"] * N_M * E.ACT_PJ_8B
+    pj = pj + ev["pool_cmp"] * N_M * E.POOL_PJ_8B
+    return pj
+
+
+def offchip_values_img(allocs) -> float:
+    """Feature-map values crossing a chip boundary per image (bit-width
+    independent; multiply by the precision to get off-chip bits)."""
+    vals = 0.0
+    for prev, a in zip(allocs, allocs[1:]):
+        same_chip = set(prev.chip_ids) & set(a.chip_ids)
+        if not same_chip or a.crosses_chip:
+            l = prev.layer
+            if isinstance(l, ConvSpec):
+                vals += l.h_out * l.w_out * l.c_out
+            else:
+                vals += l.c_out
+    return vals
+
+
+# ---------------------------------------------------------------------------
+# 3. Energy/power/CE for full networks
+# ---------------------------------------------------------------------------
 
 
 @dataclass
@@ -217,7 +353,8 @@ class DominoModel:
 
     def __init__(self, layers: List, *, precision_bits: int = 8):
         self.layers = layers
-        self.allocs: List[TileAlloc] = map_network(layers)
+        # shared frozen allocations (cached across models of one network)
+        self.allocs: List[TileAlloc] = list(map_network_cached(tuple(layers)))
         self.n_tiles = sum(a.n_tiles for a in self.allocs)
         self.n_chips = total_chips(self.allocs)
         self.bits = precision_bits
@@ -250,59 +387,35 @@ class DominoModel:
                 fill += cb + mb * 2
         return (steady + fill) / E.STEP_HZ * 1e6
 
-    def throughput_img_s(self, n_chips: Optional[int] = None) -> float:
-        bottleneck = max(
+    def bottleneck_px(self) -> float:
+        """Steady-state cycles/img: output pixels of the largest conv."""
+        return float(max(
             (l.h_out * l.w_out for l in self.layers if isinstance(l, ConvSpec)),
             default=1024,
-        )
-        per_copy = FDM_FACTOR * E.STEP_HZ / bottleneck
-        # residual skip joins (Bp shortcut via the RIFM) stall the pipeline
-        # while both operands synchronize — "skip operations ... affect
-        # performances slightly" (§IV-B1); calibrated stall factor.
-        skip = SKIP_STALL if any(
+        ))
+
+    def skip_stall(self) -> float:
+        """Residual skip joins (Bp shortcut via the RIFM) stall the pipeline
+        while both operands synchronize — "skip operations ... affect
+        performances slightly" (§IV-B1); calibrated stall factor."""
+        return SKIP_STALL if any(
             isinstance(l, ConvSpec) and l.residual_from for l in self.layers
         ) else 1.0
-        return per_copy * self.copies(n_chips) * PIPELINE_EFF * skip
+
+    def throughput_img_s(self, n_chips: Optional[int] = None) -> float:
+        per_copy = FDM_FACTOR * E.STEP_HZ / self.bottleneck_px()
+        return per_copy * self.copies(n_chips) * PIPELINE_EFF * self.skip_stall()
 
     # ---- energy ----
     def events(self) -> Events:
-        total = Events()
-        for l in self.layers:
-            total.merge(conv_events(l) if isinstance(l, ConvSpec) else fc_events(l))
-        return total
+        return events_for_layers(self.layers)
 
     def onchip_energy_img_j(self) -> float:
-        ev = self.events()
-        pj = 0.0
-        # partial-sum movement: wormhole pass-through — wire/register energy
-        # per bit-hop + the ROFM adder on arrival (no per-chunk buffering)
-        pj += ev.ps_bits * LINK_PJ_PER_BIT
-        pj += ev.adds * N_M * E.ADDER_PJ_8B
-        # control + schedule-table read per executed instruction (per hop;
-        # clock-gated when no packet in flight)
-        pj += (ev.ps_hops + ev.ifm_hops) * (E.ROFM_CTRL_PJ + E.RIFM_CTRL_PJ + E.SCHED_TABLE_PJ)
-        # IFM streaming: wire energy per hop + one RIFM 256B buffer access
-        # per K-row reuse window (in-buffer shifting, paper §II-B)
-        pj += ev.ifm_bits * LINK_PJ_PER_BIT
-        pj += (ev.ifm_hops / 3.0) * E.RIFM_BUFFER_PJ
-        # group-sum queueing in the 16KiB ROFM data buffer
-        pj += (ev.buf_push + ev.buf_pop) * E.DATA_BUFFER_PJ
-        # inter-memory computing (Tab. II functions)
-        pj += ev.act * N_M * E.ACT_PJ_8B
-        pj += ev.pool_cmp * N_M * E.POOL_PJ_8B
-        return pj * 1e-12
+        ev = network_event_totals(tuple(self.layers))
+        return float(onchip_pj_from_events(ev)) * 1e-12
 
     def offchip_bits_img(self) -> float:
-        bits = 0.0
-        for prev, a in zip(self.allocs, self.allocs[1:]):
-            same_chip = set(prev.chip_ids) & set(a.chip_ids)
-            if not same_chip or a.crosses_chip:
-                l = prev.layer
-                if isinstance(l, ConvSpec):
-                    bits += l.h_out * l.w_out * l.c_out * self.bits
-                else:
-                    bits += l.c_out * self.bits
-        return bits
+        return offchip_values_img(self.allocs) * self.bits
 
     def offchip_energy_img_j(self) -> float:
         return self.offchip_bits_img() * E.INTERCHIP_PJ_PER_BIT * 1e-12

@@ -15,22 +15,20 @@ train/grad_compress.py).
 """
 from __future__ import annotations
 
-import jax
+from repro.core import jax_compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax_compat.make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 2, model: int = 2, *, pod: int = 0):
     """Small mesh for tests (requires >= data*model host devices)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return jax_compat.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax_compat.make_mesh((data, model), ("data", "model"))
 
 
 # TPU v5e hardware constants (roofline denominators; brief-provided)

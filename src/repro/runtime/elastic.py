@@ -14,6 +14,8 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro.core import jax_compat
+
 
 @dataclass(frozen=True)
 class MeshPlan:
@@ -57,4 +59,4 @@ def build_mesh(plan: MeshPlan):
         shape, names = (plan.pod, plan.data, plan.model), ("pod", "data", "model")
     else:
         shape, names = (plan.data, plan.model), ("data", "model")
-    return jax.make_mesh(shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    return jax_compat.make_mesh(shape, names)

@@ -1,0 +1,28 @@
+"""Batched Domino design-space exploration.
+
+``SweepGrid`` (validation-first scenario schema) x ``run_sweep`` (vectorized
+evaluation of every Tab. IV column over the whole grid in one shot). The
+batched results are asserted equal to per-scenario ``DominoModel.evaluate``
+by the golden regression tests.
+"""
+from repro.sweep.engine import COLUMNS, SweepResult, network_summary, run_sweep
+from repro.sweep.registry import available_networks, resolve_network
+from repro.sweep.scenario import (
+    Precision,
+    Scenario,
+    SweepGrid,
+    SweepValidationError,
+)
+
+__all__ = [
+    "COLUMNS",
+    "Precision",
+    "Scenario",
+    "SweepGrid",
+    "SweepResult",
+    "SweepValidationError",
+    "available_networks",
+    "network_summary",
+    "resolve_network",
+    "run_sweep",
+]

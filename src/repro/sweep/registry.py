@@ -1,0 +1,39 @@
+"""Network name registry for the sweep engine.
+
+Two namespaces:
+  * the paper's Tab. IV CNNs (``vgg11-cifar`` ... ``resnet18-cifar``) from
+    ``repro.core.mapping.NETWORKS``;
+  * ``llm:<arch-id>`` for every seed config in ``repro.configs`` via the
+    FC-chain bridge (``repro.sweep.llm_bridge``).
+
+``resolve_network`` returns the (hashable, cached) layer tuple a name maps
+to — the key the mapping/schedule/event caches are all keyed on.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Tuple
+
+from repro.configs import ARCHS, get_config
+from repro.core.mapping import NETWORKS
+from repro.sweep.llm_bridge import fc_network_from_config
+
+LLM_PREFIX = "llm:"
+
+
+@lru_cache(maxsize=None)
+def available_networks() -> Tuple[str, ...]:
+    return tuple(NETWORKS) + tuple(f"{LLM_PREFIX}{a}" for a in ARCHS)
+
+
+@lru_cache(maxsize=None)
+def resolve_network(name: str) -> Tuple:
+    """Name -> immutable layer-spec tuple (raises KeyError for unknowns —
+    grids are validated before they get here)."""
+    if name in NETWORKS:
+        return tuple(NETWORKS[name]())
+    if name.startswith(LLM_PREFIX):
+        return fc_network_from_config(get_config(name[len(LLM_PREFIX):]))
+    raise KeyError(
+        f"unknown network {name!r}; known: {list(available_networks())}"
+    )

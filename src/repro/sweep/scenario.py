@@ -1,0 +1,186 @@
+"""Validation-first sweep scenario schema (the SNIPPETS "FastSim" idiom).
+
+A ``SweepGrid`` is the single, self-contained contract for a design-space
+sweep: which networks, how many chips, at what precision, and which
+substituted CIM-array energy points. Every grid is rigorously validated at
+construction — a controlled vocabulary (``Precision`` enum, the network
+registry) plus explicit bounds checks guarantee the engine only ever runs on
+well-formed input, and malformed grids are rejected upfront with actionable
+errors that name the offending value.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import asdict, dataclass, field
+from enum import IntEnum
+from itertools import product
+from typing import Dict, List, Sequence, Tuple
+
+from repro.sweep.registry import available_networks
+
+
+class SweepValidationError(ValueError):
+    """A sweep grid (or scenario) failed schema validation. The message
+    lists every problem found, one per line, with the offending value."""
+
+
+class Precision(IntEnum):
+    """Activation/weight bit-widths the energy model understands
+    (paper §IV-A bit normalization)."""
+
+    INT4 = 4
+    INT8 = 8
+    INT16 = 16
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One evaluation point: network x chip count x precision x CIM energy."""
+
+    network: str
+    n_chips: int
+    precision_bits: int
+    e_mac_pj: float
+
+    def as_dict(self) -> Dict:
+        return asdict(self)
+
+
+def _check_network(name, problems: List[str]) -> None:
+    known = available_networks()
+    if not isinstance(name, str):
+        problems.append(f"network {name!r} must be a string (one of {list(known)})")
+    elif name not in known:
+        problems.append(f"unknown network {name!r}; known networks: {list(known)}")
+
+
+def _check_chips(c, problems: List[str]) -> None:
+    if isinstance(c, bool) or not isinstance(c, int):
+        problems.append(f"chip count {c!r} must be an int (got {type(c).__name__})")
+    elif c < 1:
+        problems.append(f"chip count {c} must be >= 1")
+
+
+def _check_precision(p, problems: List[str]) -> None:
+    valid = [int(v) for v in Precision]
+    if isinstance(p, bool) or not isinstance(p, int):
+        problems.append(f"precision {p!r} must be an int, one of {valid}")
+    elif p not in valid:
+        problems.append(f"precision {p} bits is not supported; choose one of {valid}")
+
+
+def _check_e_mac(e, problems: List[str]) -> None:
+    if not isinstance(e, (int, float)) or isinstance(e, bool):
+        problems.append(f"e_mac_pj {e!r} must be a number (pJ per 8b OP)")
+    elif not math.isfinite(e):
+        problems.append(f"e_mac_pj {e!r} must be finite")
+    elif e <= 0:
+        problems.append(f"e_mac_pj {e} must be > 0 (energy per CIM OP, pJ)")
+
+
+def _unique(seq: Sequence, label: str, problems: List[str]) -> None:
+    seen = set()
+    for v in seq:
+        try:
+            dup = v in seen
+        except TypeError:
+            return  # unhashable entries already reported by the type checks
+        if dup:
+            problems.append(f"duplicate {label} entry {v!r} — grid axes must be unique")
+        seen.add(v)
+
+
+def validate_scenario(s: Scenario) -> Scenario:
+    """Validate a single scenario; returns it or raises SweepValidationError."""
+    problems: List[str] = []
+    _check_network(s.network, problems)
+    _check_chips(s.n_chips, problems)
+    _check_precision(s.precision_bits, problems)
+    _check_e_mac(s.e_mac_pj, problems)
+    if problems:
+        raise SweepValidationError("\n".join(problems))
+    return s
+
+
+@dataclass(frozen=True)
+class SweepGrid:
+    """The full cross-product grid. Axes are validated upfront; the engine
+    never sees a malformed grid.
+
+    ``networks``    — names from :func:`repro.sweep.registry.available_networks`
+                      (the four Tab. IV CNNs plus ``llm:<arch>`` bridges).
+    ``chip_counts`` — Domino chip counts (>= 1) to replicate onto.
+    ``precisions``  — activation/weight bit-widths (Precision enum values).
+    ``e_mac_pj``    — substituted CIM array energies, pJ per 8b OP at
+                      45nm/1V (the paper's plug-in parameter).
+    """
+
+    networks: Tuple[str, ...]
+    chip_counts: Tuple[int, ...]
+    precisions: Tuple[int, ...] = (int(Precision.INT8),)
+    e_mac_pj: Tuple[float, ...] = field(default_factory=lambda: (0.1,))
+
+    def __post_init__(self):
+        # normalize: accept any sequence, store tuples (frozen dataclass)
+        for name in ("networks", "chip_counts", "precisions", "e_mac_pj"):
+            v = getattr(self, name)
+            if isinstance(v, (str, bytes)) or not isinstance(v, Sequence):
+                raise SweepValidationError(
+                    f"{name} must be a sequence of values, got {v!r}"
+                )
+            object.__setattr__(self, name, tuple(v))
+        problems: List[str] = []
+        for name in ("networks", "chip_counts", "precisions", "e_mac_pj"):
+            if not getattr(self, name):
+                problems.append(f"{name} is empty — the grid needs at least one value")
+        for n in self.networks:
+            _check_network(n, problems)
+        for c in self.chip_counts:
+            _check_chips(c, problems)
+        for p in self.precisions:
+            _check_precision(p, problems)
+        for e in self.e_mac_pj:
+            _check_e_mac(e, problems)
+        for seq, label in ((self.networks, "networks"),
+                           (self.chip_counts, "chip_counts"),
+                           (self.precisions, "precisions"),
+                           (self.e_mac_pj, "e_mac_pj")):
+            _unique(seq, label, problems)
+        if problems:
+            raise SweepValidationError("invalid sweep grid:\n" + "\n".join(problems))
+
+    @property
+    def n_scenarios(self) -> int:
+        return (len(self.networks) * len(self.chip_counts)
+                * len(self.precisions) * len(self.e_mac_pj))
+
+    def scenarios(self) -> List[Scenario]:
+        """The cross-product, in deterministic (network, chips, precision,
+        e_mac) row-major order."""
+        return [
+            Scenario(network=n, n_chips=c, precision_bits=int(p), e_mac_pj=float(e))
+            for n, c, p, e in product(
+                self.networks, self.chip_counts, self.precisions, self.e_mac_pj
+            )
+        ]
+
+    def as_dict(self) -> Dict:
+        return dict(networks=list(self.networks),
+                    chip_counts=list(self.chip_counts),
+                    precisions=[int(p) for p in self.precisions],
+                    e_mac_pj=[float(e) for e in self.e_mac_pj])
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "SweepGrid":
+        extra = set(d) - {"networks", "chip_counts", "precisions", "e_mac_pj"}
+        if extra:
+            raise SweepValidationError(
+                f"unknown grid fields {sorted(extra)}; expected networks, "
+                f"chip_counts, precisions, e_mac_pj"
+            )
+        missing = {"networks", "chip_counts"} - set(d)
+        if missing:
+            raise SweepValidationError(
+                f"missing required grid fields {sorted(missing)}"
+            )
+        return cls(**d)

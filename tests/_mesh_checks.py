@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import jax_compat
 from repro.core.com import (
     com_all_gather,
     com_matmul_local,
@@ -28,13 +29,13 @@ from repro.train.grad_compress import compressed_pod_psum
 
 
 def check_com_collectives():
-    mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax_compat.make_mesh((8,), ("model",))
     key = jax.random.PRNGKey(0)
 
     # reduce-scatter == sum of parts
     xg = jax.random.normal(key, (64, 16, 5))
-    f = jax.shard_map(lambda xp: com_reduce_scatter(xp, "model"),
-                      mesh=mesh, in_specs=P("model"), out_specs=P("model"), check_vma=False)
+    f = jax_compat.shard_map(lambda xp: com_reduce_scatter(xp, "model"),
+                             mesh=mesh, in_specs=P("model"), out_specs=P("model"))
     out = f(xg)
     ref = xg.reshape(8, 8, 16, 5).sum(0).reshape(128, 5)
     np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
@@ -49,16 +50,15 @@ def check_com_collectives():
     )
 
     # bidirectional ring
-    fb = jax.shard_map(lambda xl, wl: com_matmul_local_bidir(xl, wl, "model"),
-                       mesh=mesh, in_specs=(P(None, "model"), P("model", None)),
-                       out_specs=P(None, "model"), check_vma=False)
+    fb = jax_compat.shard_map(lambda xl, wl: com_matmul_local_bidir(xl, wl, "model"),
+                              mesh=mesh, in_specs=(P(None, "model"), P("model", None)),
+                              out_specs=P(None, "model"))
     np.testing.assert_allclose(fb(x, w), x @ w, rtol=1e-4, atol=1e-4)
 
     # all-gather
     xa = jax.random.normal(key, (16, 3))
-    fg = jax.shard_map(lambda xl: com_all_gather(xl, "model").reshape(-1, xl.shape[-1]),
-                       mesh=mesh, in_specs=P("model", None), out_specs=P(None, None),
-                       check_vma=False)
+    fg = jax_compat.shard_map(lambda xl: com_all_gather(xl, "model").reshape(-1, xl.shape[-1]),
+                              mesh=mesh, in_specs=P("model", None), out_specs=P(None, None))
     np.testing.assert_allclose(fg(xa), xa, rtol=0, atol=0)
 
     # strategy selector: psum vs com agree
@@ -72,7 +72,7 @@ def check_com_collectives():
 
 def check_com_collective_bytes_in_hlo():
     """COM lowers to collective-permute only (no all-reduce)."""
-    mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax_compat.make_mesh((8,), ("model",))
     x = jnp.ones((4, 64))
     w = jnp.ones((64, 32))
     com_mm = make_com_matmul(mesh, "model")
@@ -86,8 +86,7 @@ def check_com_collective_bytes_in_hlo():
 
 
 def check_grad_compress():
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = jax_compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
     key = jax.random.PRNGKey(0)
     grads = {"a": jax.random.normal(key, (16, 8)), "b": jax.random.normal(key, (4,))}
     reduced, err = compressed_pod_psum(grads, None, mesh, axis="pod")
@@ -108,7 +107,7 @@ def check_sharded_train_step():
     from repro.train.optimizer import OptConfig, init_opt_state
     from repro.train.train_step import make_train_step
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax_compat.make_mesh((2, 4), ("data", "model"))
     cfg = get_config("smollm-135m").reduced()
     arules = sh.act_rules(mesh, job="train")
     cc = CallConfig(dp_size=2, remat="block", shard_fn=sh.make_shard_fn(mesh, arules))
@@ -141,7 +140,7 @@ def check_elastic_remesh_restore():
     from repro.checkpoint import checkpoint as ck
     from repro.runtime.elastic import MeshPlan, build_mesh, plan_remesh
 
-    mesh_a = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_a = jax_compat.make_mesh((2, 4), ("data", "model"))
     tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
     tree = jax.tree.map(
         lambda x: jax.device_put(x, NamedSharding(mesh_a, P("data", "model"))), tree

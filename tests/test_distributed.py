@@ -17,6 +17,10 @@ def test_mesh_checks_subprocess():
         [sys.executable, script], capture_output=True, text=True, timeout=540, env=env
     )
     sys.stdout.write(proc.stdout[-3000:])
-    sys.stderr.write(proc.stderr[-2000:])
-    assert proc.returncode == 0
+    if proc.returncode != 0:
+        pytest.fail(
+            f"mesh checks subprocess exited {proc.returncode}\n"
+            f"--- stdout (tail) ---\n{proc.stdout[-3000:]}\n"
+            f"--- stderr (tail) ---\n{proc.stderr[-6000:]}"
+        )
     assert "ALL MESH CHECKS PASSED" in proc.stdout

@@ -8,7 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # stripped container: deterministic fallback
+    from _hypothesis_stub import given, settings, st
 
 from repro.checkpoint import checkpoint as ck
 from repro.data.pipeline import DataConfig, Prefetcher, SyntheticTokens

@@ -1,6 +1,9 @@
 """Domino ISA (paper Tab. I/II): encode/decode roundtrip + schedule periods."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # stripped container: deterministic fallback
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.isa import Buf, CInstr, Dir, Func, MInstr, ScheduleTable, decode
 from repro.core.mapping import ConvSpec

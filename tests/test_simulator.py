@@ -2,7 +2,10 @@
 event counts (hypothesis over layer shapes) + Tab. IV reproduction bands."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # stripped container: deterministic fallback
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.energy import COUNTERPARTS, PAPER_DOMINO
 from repro.core.mapping import NETWORKS, ConvSpec, FCSpec, map_network, tiles_for, total_chips
@@ -54,11 +57,18 @@ def test_analytic_events_match_cycle_sim(h, w, c, m, k):
 
 
 def test_group_sum_queue_is_bounded():
-    """Group-sums wait in *bounded* ROFM buffers (16KiB => 64 vectors)."""
+    """Group-sums wait in *bounded* ROFM buffers (16KiB => 64 vectors).
+
+    Depth 1 holds because every output step pushes exactly one group-sum per
+    kernel row and pops it in the same step — assert that push/pop balance
+    (the invariant behind the closed-form depth) and the buffer bound.
+    """
     layer = ConvSpec("t", 3, 8, 8, 12, 12)
     sim = COMGridSim(layer, np.random.default_rng(2).normal(size=(3, 3, 8, 8)))
     sim.run(np.random.default_rng(3).normal(size=(12, 12, 8)))
-    assert sim.max_queue_depth <= 64
+    assert sim.ev.buf_push == sim.ev.buf_pop  # every queued group-sum drains
+    assert sim.ev.buf_push == layer.h_out * layer.w_out * layer.k
+    assert 0 < sim.max_queue_depth <= 64
 
 
 def test_tile_allocation_formula():

@@ -1,0 +1,180 @@
+"""Sweep engine: golden regression vs the scalar DominoModel oracle +
+validation-first schema property tests + cache behaviour."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # stripped container: deterministic fallback
+    from _hypothesis_stub import given, settings, st
+
+from repro.configs import ARCHS
+from repro.core.mapping import NETWORKS, map_network_cached
+from repro.core.simulator import DominoModel
+from repro.sweep import (
+    COLUMNS,
+    Scenario,
+    SweepGrid,
+    SweepValidationError,
+    available_networks,
+    network_summary,
+    resolve_network,
+    run_sweep,
+)
+from repro.sweep.engine import evaluate_scenario
+
+# parametrize straight off the registry so new namespaces stay covered
+ALL_NETWORKS = available_networks()
+
+
+# ---------------------------------------------------------------------------
+# golden regression: batched == scalar on every Tab. IV column
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("network", ALL_NETWORKS)
+def test_batched_sweep_matches_scalar_evaluate(network):
+    """Every seed network (Tab. IV CNNs + every config in repro.configs via
+    the llm: bridge) through a small grid: 1e-9 on every column."""
+    grid = SweepGrid(
+        networks=(network,),
+        chip_counts=(1, 7, 24),
+        precisions=(8, 16),
+        e_mac_pj=(0.02, 0.1),
+    )
+    result = run_sweep(grid)
+    assert result.n_scenarios == 12
+    for i, s in enumerate(result.scenarios):
+        ref = evaluate_scenario(s)
+        for c in COLUMNS:
+            assert float(result.columns[c][i]) == pytest.approx(
+                float(ref[c]), rel=1e-9
+            ), f"{network}: column {c} diverged for {s}"
+
+
+def test_full_grid_shape_and_order():
+    grid = SweepGrid(networks=tuple(NETWORKS), chip_counts=(5, 6, 10, 20),
+                     precisions=(8, 16), e_mac_pj=(0.02, 0.1))
+    assert grid.n_scenarios == 4 * 4 * 2 * 2 == 64
+    scenarios = grid.scenarios()
+    assert len(scenarios) == 64
+    # row-major: network axis slowest, e_mac fastest
+    assert scenarios[0] == Scenario("vgg11-cifar", 5, 8, 0.02)
+    assert scenarios[1] == Scenario("vgg11-cifar", 5, 8, 0.1)
+    assert scenarios[-1] == Scenario("resnet18-cifar", 20, 16, 0.1)
+    result = run_sweep(grid)
+    for c in COLUMNS:
+        assert result.columns[c].shape == (64,)
+        assert np.all(np.isfinite(result.columns[c]))
+
+
+def test_sweep_rows_roundtrip_json():
+    import json
+
+    grid = SweepGrid(networks=("vgg11-cifar",), chip_counts=(5,))
+    payload = json.loads(json.dumps(run_sweep(grid).as_dict()))
+    assert payload["n_scenarios"] == 1
+    assert set(payload["rows"][0]) >= set(COLUMNS)
+    assert SweepGrid.from_dict(payload["grid"]) == grid
+
+
+# ---------------------------------------------------------------------------
+# validation-first schema: malformed grids never reach the engine
+# ---------------------------------------------------------------------------
+
+
+@given(
+    bad_network=st.sampled_from(["vgg99", "", "resnet18", 7, None]),
+)
+@settings(max_examples=10, deadline=None)
+def test_unknown_network_rejected_with_known_list(bad_network):
+    with pytest.raises(SweepValidationError) as ei:
+        SweepGrid(networks=(bad_network,), chip_counts=(5,))
+    assert "network" in str(ei.value)
+
+
+@given(bad_chips=st.sampled_from([0, -1, -100, 2.5, "six", None, True]))
+@settings(max_examples=10, deadline=None)
+def test_bad_chip_count_rejected(bad_chips):
+    with pytest.raises(SweepValidationError) as ei:
+        SweepGrid(networks=("vgg11-cifar",), chip_counts=(bad_chips,))
+    assert "chip count" in str(ei.value)
+
+
+@given(bad_prec=st.sampled_from([0, 3, 7, -8, 64, "8", None]))
+@settings(max_examples=10, deadline=None)
+def test_bad_precision_rejected(bad_prec):
+    with pytest.raises(SweepValidationError) as ei:
+        SweepGrid(networks=("vgg11-cifar",), chip_counts=(5,),
+                  precisions=(bad_prec,))
+    assert "precision" in str(ei.value)
+
+
+@given(bad_e=st.sampled_from([0.0, -0.5, float("nan"), float("inf"), "x", None]))
+@settings(max_examples=10, deadline=None)
+def test_bad_e_mac_rejected(bad_e):
+    with pytest.raises(SweepValidationError) as ei:
+        SweepGrid(networks=("vgg11-cifar",), chip_counts=(5,), e_mac_pj=(bad_e,))
+    assert "e_mac_pj" in str(ei.value)
+
+
+def test_empty_axes_and_duplicates_rejected():
+    with pytest.raises(SweepValidationError, match="empty"):
+        SweepGrid(networks=(), chip_counts=(5,))
+    with pytest.raises(SweepValidationError, match="duplicate"):
+        SweepGrid(networks=("vgg11-cifar", "vgg11-cifar"), chip_counts=(5,))
+
+
+def test_error_message_lists_every_problem_at_once():
+    with pytest.raises(SweepValidationError) as ei:
+        SweepGrid(networks=("nope",), chip_counts=(0,), precisions=(3,),
+                  e_mac_pj=(-1.0,))
+    msg = str(ei.value)
+    for frag in ("nope", "chip count 0", "precision 3", "e_mac_pj -1.0"):
+        assert frag in msg, f"missing {frag!r} in:\n{msg}"
+
+
+def test_from_dict_rejects_unknown_and_missing_fields():
+    with pytest.raises(SweepValidationError, match="unknown grid fields"):
+        SweepGrid.from_dict({"networks": ["vgg11-cifar"], "chip_counts": [5],
+                             "typo_axis": [1]})
+    with pytest.raises(SweepValidationError, match="missing required"):
+        SweepGrid.from_dict({"networks": ["vgg11-cifar"]})
+
+
+def test_scalar_string_axis_rejected():
+    # a bare string is a sequence of characters — must not be accepted
+    with pytest.raises(SweepValidationError):
+        SweepGrid(networks="vgg11-cifar", chip_counts=(5,))
+
+
+# ---------------------------------------------------------------------------
+# caching: repeated scenarios are free
+# ---------------------------------------------------------------------------
+
+
+def test_network_structures_are_cached():
+    name = "vgg16-imagenet"
+    layers = resolve_network(name)
+    assert resolve_network(name) is layers
+    assert map_network_cached(layers) is map_network_cached(layers)
+    assert network_summary(name) is network_summary(name)
+
+
+def test_repeat_sweep_hits_caches():
+    grid = SweepGrid(networks=("vgg19-imagenet",), chip_counts=(10,))
+    run_sweep(grid)
+    before = network_summary.cache_info().hits
+    run_sweep(grid)
+    assert network_summary.cache_info().hits > before
+
+
+def test_registry_covers_all_seed_configs():
+    names = available_networks()
+    for arch in ARCHS:
+        assert f"llm:{arch}" in names
+    for cnn in NETWORKS:
+        assert cnn in names
+    # and each resolves to a non-empty analytic network the model accepts
+    m = DominoModel(list(resolve_network("llm:smollm-135m")))
+    assert m.n_tiles > 0 and m.total_ops() > 0
