@@ -1,0 +1,52 @@
+"""CIM array geometry pareto search over the `ArchSpec` axes.
+
+Sweeps the ``n_c`` x ``n_m`` array geometry (with tiles/chip alongside) for
+one network on the JAX backend and reports the energy-efficiency vs
+area-efficiency pareto front — the design-space question the ArchSpec-first
+API exists to answer: *which array shape should a Domino chip build?*
+
+    PYTHONPATH=src python examples/arch_pareto.py [network]
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.sweep import SweepGrid, run_sweep  # noqa: E402
+
+network = sys.argv[1] if len(sys.argv) > 1 else "vgg16-imagenet"
+
+GEOM = (32, 64, 128, 256, 512)
+grid = SweepGrid(
+    networks=(network,),
+    chip_counts=(10,),
+    precisions=(8,),
+    e_mac_pj=(0.05,),
+    tiles_per_chip=(120, 240, 480),
+    n_c=GEOM,
+    n_m=GEOM,
+)
+result = run_sweep(grid, backend="jax")
+print(f"{grid.n_scenarios} geometry points for {network} in "
+      f"{result.engine_wall_s * 1e3:.1f} ms ({result.backend} backend)\n")
+
+# pareto front: maximize CE (TOPS/W) and throughput density (TOPS/mm²)
+ce = result.columns["ce_tops_w"]
+thr = result.columns["thr_tops_mm2"]
+points = sorted(
+    ((float(ce[i]), float(thr[i]), s) for i, s in enumerate(result.scenarios)),
+    key=lambda p: (-p[0], -p[1]),
+)
+front = []
+best_thr = -1.0
+for c, t, s in points:
+    if t > best_thr:
+        front.append((c, t, s))
+        best_thr = t
+
+print(f"{'n_c':>5s} {'n_m':>5s} {'t/chip':>6s} | {'CE TOPS/W':>9s} "
+      f"{'TOPS/mm2':>9s} {'tiles':>7s}")
+for c, t, s in front:
+    i = result.scenarios.index(s)
+    print(f"{s.n_c:5d} {s.n_m:5d} {s.tiles_per_chip:6d} | {c:9.2f} {t:9.3f} "
+          f"{int(result.columns['n_tiles'][i]):7d}")
+print(f"\npareto front: {len(front)} of {grid.n_scenarios} design points")

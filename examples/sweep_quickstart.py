@@ -1,8 +1,8 @@
-"""Minimal sweep-engine walkthrough.
+"""Minimal sweep-engine walkthrough (`ArchSpec`-first API).
 
-Builds a small validated grid, runs the batched engine, and prints a
-Tab. IV-style table — including an ``llm:`` bridge network to show the
-sweep covering the repo's LLM configs.
+Builds a small validated grid — including an architecture axis and an
+``llm:`` bridge network — runs the batched engine on the NumPy oracle and
+the JAX backend, and prints a Tab. IV-style table.
 
     PYTHONPATH=src python examples/sweep_quickstart.py
 """
@@ -17,18 +17,31 @@ grid = SweepGrid(
     chip_counts=(5, 10),
     precisions=(8,),
     e_mac_pj=(0.02, 0.1),
+    tiles_per_chip=(240,),      # ArchSpec axes: architecture is part of the grid
+    n_c=(128, 256),
+    node_nm=(45.0,),
 )
-result = run_sweep(grid)
+result = run_sweep(grid)                          # backend="numpy": the oracle
 
-print(f"{'network':18s} {'chips':>5s} {'e_mac':>6s} | {'img/s':>10s} "
+print(f"{'network':18s} {'chips':>5s} {'n_c':>4s} {'e_mac':>6s} | {'img/s':>10s} "
       f"{'power W':>8s} {'CE TOPS/W':>9s}")
 for r in result.rows():
-    print(f"{r['network']:18s} {int(r['n_chips']):5d} {r['e_mac_pj']:6.2f} | "
-          f"{r['img_s']:10.0f} {r['power_w']:8.2f} {r['ce_tops_w']:9.2f}")
-print(f"\n{result.n_scenarios} scenarios in {result.engine_wall_s * 1e3:.2f} ms")
+    print(f"{r['network']:18s} {int(r['n_chips']):5d} {int(r['n_c']):4d} "
+          f"{r['e_mac_pj']:6.2f} | {r['img_s']:10.0f} {r['power_w']:8.2f} "
+          f"{r['ce_tops_w']:9.2f}")
+print(f"\n{result.n_scenarios} scenarios in {result.engine_wall_s * 1e3:.2f} ms "
+      f"({result.backend})")
+
+# the same grid on the jitted JAX kernel — golden-tested against the oracle
+jax_result = run_sweep(grid, backend="jax")
+ce_gap = max(abs(a - b) for a, b in
+             zip(jax_result.columns["ce_tops_w"], result.columns["ce_tops_w"]))
+print(f"jax backend: {jax_result.engine_wall_s * 1e3:.2f} ms, "
+      f"CE agrees to {ce_gap:.2e}")
 
 # validation-first: malformed grids never reach the engine
 try:
-    SweepGrid(networks=("vgg99-nope",), chip_counts=(0,), e_mac_pj=(-1.0,))
+    SweepGrid(networks=("vgg99-nope",), chip_counts=(0,), e_mac_pj=(-1.0,),
+              n_c=(0,))
 except SweepValidationError as e:
     print(f"\nrejected upfront, as designed:\n{e}")

@@ -1,3 +1,6 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from repro.core.arch import DEFAULT_ARCH, ArchSpec, EnergyTable
+
+__all__ = ["ArchSpec", "DEFAULT_ARCH", "EnergyTable"]

@@ -1,62 +1,51 @@
 """Energy/area model (paper Tab. III) + bit/VDD/technology normalization
 (paper §IV-A, Stillmaker & Baas [13]) + the Tab. IV counterpart datasheet.
 
-All component energies are per access/operation at 45nm, 1V, 8-bit, 10MHz
-instruction step; areas in um^2.
+The per-component numbers live on :class:`repro.core.arch.ArchSpec`
+(``DEFAULT_ARCH.energy`` is the Tab. III table at 45nm/1V/8-bit/10MHz); the
+module-level constants below are thin **deprecated** aliases kept for the
+pre-`ArchSpec` call sites — new code should read fields off an ``ArchSpec``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Dict
 
-# ---- Tab. III — per-component energy (pJ) and area (um^2) ----
-RIFM_BUFFER_PJ = 281.3        # 256B buffer access
-RIFM_CTRL_PJ = 10.4
-RIFM_AREA = 2227.1
+from repro.core.arch import (  # noqa: F401  (node_energy_factor re-exported)
+    DEFAULT_ARCH,
+    node_energy_factor,
+)
 
-ADDER_PJ_8B = 0.02            # 8b x 8 x 2 adders: per 8b add
-POOL_PJ_8B = 0.0077           # 7.7 fJ / 8b
-ACT_PJ_8B = 0.0009            # 0.9 fJ / 8b
-DATA_BUFFER_PJ = 281.3        # 16KiB ROFM data buffer access
-SCHED_TABLE_PJ = 2.2          # per 16b read
-IO_BUFFER_PJ_64B = 42.1       # input/output buffer per 64b access
-ROFM_CTRL_PJ = 28.5
-ROFM_AREA = 57972.7
+# ---- Tab. III — deprecated aliases of DEFAULT_ARCH.energy fields ----
+_E = DEFAULT_ARCH.energy
+RIFM_BUFFER_PJ = _E.rifm_buffer_pj
+RIFM_CTRL_PJ = _E.rifm_ctrl_pj
+RIFM_AREA = _E.rifm_area_um2
 
-INTERCHIP_PJ_PER_BIT = 0.55   # 80Gbps x 8 transceivers
-INTERCHIP_AREA = 8e5
+ADDER_PJ_8B = _E.adder_pj_8b
+POOL_PJ_8B = _E.pool_pj_8b
+ACT_PJ_8B = _E.act_pj_8b
+DATA_BUFFER_PJ = _E.data_buffer_pj
+SCHED_TABLE_PJ = _E.sched_table_pj
+IO_BUFFER_PJ_64B = _E.io_buffer_pj_64b
+ROFM_CTRL_PJ = _E.rofm_ctrl_pj
+ROFM_AREA = _E.rofm_area_um2
 
-CIM_AREA_256 = 0.026e6        # um^2 equivalent 256x256 CIM array (est.)
+INTERCHIP_PJ_PER_BIT = _E.interchip_pj_per_bit
+INTERCHIP_AREA = _E.interchip_area_um2
 
-STEP_HZ = 10e6                # instruction step frequency
-TILE_BW_BPS = 40e9            # inter-tile bandwidth
-PRECISION_BITS = 8
-VDD = 1.0
-NODE_NM = 45
+CIM_AREA_256 = _E.cim_area_um2
+
+STEP_HZ = DEFAULT_ARCH.step_hz
+TILE_BW_BPS = DEFAULT_ARCH.tile_bw_bps
+PRECISION_BITS = DEFAULT_ARCH.precision_bits
+VDD = DEFAULT_ARCH.vdd
+NODE_NM = DEFAULT_ARCH.node_nm
 
 
 def tile_area_um2() -> float:
-    return RIFM_AREA + ROFM_AREA + CIM_AREA_256
-
-
-# ---- Stillmaker-Baas energy scaling (normalized to 45nm) ----
-# Relative dynamic energy per op vs node (fit to [13] Tab. 6 trends).
-_NODE_ENERGY = {
-    180: 10.8, 130: 5.8, 90: 3.22, 65: 1.93, 45: 1.0, 40: 0.88, 32: 0.60,
-    28: 0.52, 22: 0.38, 20: 0.35, 16: 0.28, 14: 0.25, 10: 0.18, 7: 0.12,
-}
-
-
-def node_energy_factor(node_nm: float) -> float:
-    nodes = sorted(_NODE_ENERGY)
-    if node_nm in _NODE_ENERGY:
-        return _NODE_ENERGY[node_nm]
-    lo = max([n for n in nodes if n <= node_nm], default=nodes[0])
-    hi = min([n for n in nodes if n >= node_nm], default=nodes[-1])
-    if lo == hi:
-        return _NODE_ENERGY[lo]
-    t = (node_nm - lo) / (hi - lo)
-    return _NODE_ENERGY[lo] * (1 - t) + _NODE_ENERGY[hi] * t
+    """Deprecated alias of ``DEFAULT_ARCH.tile_area_um2()``."""
+    return DEFAULT_ARCH.tile_area_um2()
 
 
 def normalize_energy(e: float, *, node_from: float, node_to: float = 45,

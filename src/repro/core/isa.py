@@ -67,6 +67,16 @@ class Func(enum.IntEnum):
     BP = 5    # direct transmission ("skip" connection)
 
 
+def _check_field(value: int, width: int, label: str) -> int:
+    v = int(value)
+    if not 0 <= v < (1 << width):
+        raise ValueError(
+            f"{label} field {value!r} does not fit in {width} bits "
+            f"(valid range 0..{(1 << width) - 1})"
+        )
+    return v
+
+
 @dataclass(frozen=True)
 class CInstr:
     rx: Dir = Dir.NONE
@@ -75,9 +85,11 @@ class CInstr:
     tx: Dir = Dir.NONE
 
     def encode(self) -> int:
-        assert 0 <= int(self.rx) < 32 and 0 <= int(self.sum) < 16
-        tx = int(self.tx) & 0xF
-        return (int(self.rx) << 11) | (int(self.sum) << 7) | (int(self.buf) << 5) | (tx << 1) | 0
+        rx = _check_field(self.rx, 5, "CInstr.rx")
+        s = _check_field(self.sum, 4, "CInstr.sum")
+        buf = _check_field(self.buf, 2, "CInstr.buf")
+        tx = _check_field(self.tx, 4, "CInstr.tx (no PE)")
+        return (rx << 11) | (s << 7) | (buf << 5) | (tx << 1) | 0
 
 
 @dataclass(frozen=True)
@@ -87,8 +99,10 @@ class MInstr:
     tx: Dir = Dir.NONE
 
     def encode(self) -> int:
-        tx = int(self.tx) & 0xF
-        return (int(self.rx) << 11) | (int(self.func) << 5) | (tx << 1) | 1
+        rx = _check_field(self.rx, 5, "MInstr.rx")
+        func = _check_field(self.func, 6, "MInstr.func")
+        tx = _check_field(self.tx, 4, "MInstr.tx (no PE)")
+        return (rx << 11) | (func << 5) | (tx << 1) | 1
 
 
 Instr = "CInstr | MInstr"
@@ -117,6 +131,13 @@ class ScheduleTable:
         if len(words) > self.MAX_ENTRIES:
             raise ValueError(
                 f"schedule table overflow: {len(words)} > {self.MAX_ENTRIES}"
+            )
+        if period is not None and not 1 <= period <= len(words):
+            # the counter indexes words modulo the period: a period longer
+            # than the store would read past the loaded instructions
+            raise ValueError(
+                f"schedule period {period} must be in 1..{len(words)} "
+                f"(the table holds {len(words)} instruction words)"
             )
         self.words = words
         self.period = period if period is not None else len(words)

@@ -17,9 +17,12 @@ from dataclasses import dataclass, field
 from functools import lru_cache
 from typing import Dict, List, Optional, Tuple
 
-N_C = 256  # CIM rows
-N_M = 256  # CIM cols
-TILES_PER_CHIP = 240
+from repro.core.arch import DEFAULT_ARCH, ArchSpec
+
+# Deprecated aliases of DEFAULT_ARCH fields — new code takes an ``ArchSpec``.
+N_C = DEFAULT_ARCH.n_c              # CIM rows
+N_M = DEFAULT_ARCH.n_m              # CIM cols
+TILES_PER_CHIP = DEFAULT_ARCH.tiles_per_chip
 
 
 @dataclass(frozen=True)
@@ -82,22 +85,23 @@ class TileAlloc:
     crosses_chip: bool = False
 
 
-def tiles_for(layer) -> Tuple[int, Tuple[int, int, int]]:
+def tiles_for(layer, arch: ArchSpec = DEFAULT_ARCH) -> Tuple[int, Tuple[int, int, int]]:
     if isinstance(layer, ConvSpec):
-        cb = math.ceil(layer.c_in / N_C)
-        mb = math.ceil(layer.c_out / N_M)
+        cb = math.ceil(layer.c_in / arch.n_c)
+        mb = math.ceil(layer.c_out / arch.n_m)
         return layer.k * layer.k * cb * mb, (layer.k * layer.k, cb, mb)
-    cb = math.ceil(layer.c_in / N_C)
-    mb = math.ceil(layer.c_out / N_M)
+    cb = math.ceil(layer.c_in / arch.n_c)
+    mb = math.ceil(layer.c_out / arch.n_m)
     return cb * mb, (1, cb, mb)
 
 
-def map_network(layers: List, tiles_per_chip: int = TILES_PER_CHIP) -> List[TileAlloc]:
+def map_network(layers: List, arch: ArchSpec = DEFAULT_ARCH) -> List[TileAlloc]:
     """Greedy in-order placement; returns per-layer allocations w/ chip ids."""
+    tiles_per_chip = arch.tiles_per_chip
     allocs: List[TileAlloc] = []
     chip, used = 0, 0
     for layer in layers:
-        n, grid = tiles_for(layer)
+        n, grid = tiles_for(layer, arch)
         chips: List[int] = []
         left = n
         start_chip = chip
@@ -118,13 +122,20 @@ def map_network(layers: List, tiles_per_chip: int = TILES_PER_CHIP) -> List[Tile
 
 
 @lru_cache(maxsize=None)
-def map_network_cached(layers: Tuple, tiles_per_chip: int = TILES_PER_CHIP) -> Tuple[TileAlloc, ...]:
-    """``map_network`` memoized on the (hashable) layer-spec tuple.
+def _map_network_cached(layers: Tuple, arch: ArchSpec) -> Tuple[TileAlloc, ...]:
+    return tuple(map_network(list(layers), arch))
 
-    Repeated scenarios over the same network — the sweep engine's common
-    case — get their allocation for free. Safe to share: TileAlloc is frozen.
+
+def map_network_cached(layers: Tuple, arch: ArchSpec = DEFAULT_ARCH) -> Tuple[TileAlloc, ...]:
+    """``map_network`` memoized on the ``(layers, arch)`` pair.
+
+    Repeated scenarios over the same network *and* architecture — the sweep
+    engine's common case — get their allocation for free; sweeping geometry
+    or tiles/chip gets its own cache line per ``ArchSpec``. Safe to share:
+    TileAlloc is frozen. (The default-arg call is normalized onto the same
+    cache line as an explicit ``DEFAULT_ARCH``.)
     """
-    return tuple(map_network(list(layers), tiles_per_chip))
+    return _map_network_cached(layers, arch)
 
 
 def total_chips(allocs: List[TileAlloc]) -> int:

@@ -34,6 +34,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import energy as E
+from repro.core.arch import DEFAULT_ARCH, ArchSpec
 from repro.core.isa import Buf, CInstr, Dir, Func, MInstr, Sum
 from repro.core.mapping import (
     N_C,
@@ -54,10 +55,11 @@ from repro.core.schedule import (
     conv_period_cols,
 )
 
-FDM_FACTOR = 16
-PIPELINE_EFF = 0.60
-SKIP_STALL = 0.25
-LINK_PJ_PER_BIT = 0.30  # 45nm NoC wire+register+crossbar per bit-hop (Noxim-class)
+# Deprecated aliases of DEFAULT_ARCH fields — new code takes an ``ArchSpec``.
+FDM_FACTOR = DEFAULT_ARCH.fdm_factor
+PIPELINE_EFF = DEFAULT_ARCH.pipeline_eff
+SKIP_STALL = DEFAULT_ARCH.skip_stall
+LINK_PJ_PER_BIT = DEFAULT_ARCH.energy.link_pj_per_bit  # NoC pJ per bit-hop
 
 
 # ---------------------------------------------------------------------------
@@ -90,10 +92,12 @@ class COMGridSim:
     semantics. Computes real outputs and counts events.
     """
 
-    def __init__(self, layer: ConvSpec, weights: np.ndarray):
-        assert layer.c_in <= N_C and layer.c_out <= N_M
+    def __init__(self, layer: ConvSpec, weights: np.ndarray,
+                 arch: ArchSpec = DEFAULT_ARCH):
+        assert layer.c_in <= arch.n_c and layer.c_out <= arch.n_m
         assert weights.shape == (layer.k, layer.k, layer.c_in, layer.c_out)
         self.layer = layer
+        self.arch = arch
         self.w = weights.astype(np.float64)
         self.ev = Events()
 
@@ -115,7 +119,7 @@ class COMGridSim:
         Ho, Wo, M = L.h_out, L.w_out, L.c_out
         x = np.pad(ifm.astype(np.float64), ((P, P), (P, P), (0, 0)))
         out = np.zeros((Ho, Wo, M))
-        m_bits = min(M, 256) * 8
+        m_bits = min(M, self.arch.n_m) * 8
         # gather index: patch column of (ox, kc) inside a padded IFM row
         col_idx = np.arange(Wo)[:, None] * S + np.arange(K)[None, :]
 
@@ -149,7 +153,7 @@ class COMGridSim:
             # IFM streaming: each input row segment visits the K² chain once
             # per output row (in-buffer shift gives K-row reuse)
             self.ev.ifm_hops += K * K * (W + 2 * P)
-            self.ev.ifm_bits += K * K * (W + 2 * P) * min(C, 256) * 8
+            self.ev.ifm_bits += K * K * (W + 2 * P) * min(C, self.arch.n_c) * 8
         # the bounded ROFM queues hold at most one group-sum per kernel row:
         # each output step pushes K and pops K (same invariant the chain walk
         # observed via max(len(queue)) + 1)
@@ -227,22 +231,23 @@ def layer_table(layers: Tuple) -> LayerTable:
     )
 
 
-def batched_layer_events(t: LayerTable) -> Dict[str, np.ndarray]:
+def batched_layer_events(t: LayerTable, arch: ArchSpec = DEFAULT_ARCH) -> Dict[str, np.ndarray]:
     """Per-layer event counts, (n_layers,) int64 per Events field.
 
     Same closed forms the scalar API always used — validated against
     COMGridSim — just evaluated as NumPy array expressions over the whole
-    layer batch instead of a Python loop per layer.
+    layer batch instead of a Python loop per layer. The ``arch`` geometry
+    (``n_c`` x ``n_m``) sets the block factors and on-chip value widths.
     """
     conv = t.is_conv
     K = t.k
     K2 = K * K
-    cb = -(-t.c_in // N_C)                 # ceil-div
-    mb = -(-t.c_out // N_M)
+    cb = -(-t.c_in // arch.n_c)            # ceil-div
+    mb = -(-t.c_out // arch.n_m)
     px = t.h_out * t.w_out
     chains = cb * mb                       # parallel accumulation chains
-    m_bits = np.minimum(t.c_out, N_M) * 8
-    c_bits = np.minimum(t.c_in, N_C) * 8
+    m_bits = np.minimum(t.c_out, arch.n_m) * 8
+    c_bits = np.minimum(t.c_in, arch.n_c) * 8
     conv_hops = px * chains * (K2 + K - 1) + px * mb * (cb - 1)
     fc_hops = mb * (cb - 1) + mb           # column accumulation + egress
     ps_hops = np.where(conv, conv_hops, fc_hops)
@@ -268,53 +273,61 @@ def batched_layer_events(t: LayerTable) -> Dict[str, np.ndarray]:
 
 
 @lru_cache(maxsize=None)
-def network_event_totals(layers: Tuple) -> Dict[str, int]:
-    """Summed per-image event counts for a layer tuple (cached)."""
-    per_layer = batched_layer_events(layer_table(layers))
+def _network_event_totals(layers: Tuple, arch: ArchSpec) -> Dict[str, int]:
+    per_layer = batched_layer_events(layer_table(layers), arch)
     return {f: int(per_layer[f].sum()) for f in EVENT_FIELDS}
 
 
-def events_for_layers(layers) -> Events:
-    return Events(**network_event_totals(tuple(layers)))
+def network_event_totals(layers: Tuple, arch: ArchSpec = DEFAULT_ARCH) -> Dict[str, int]:
+    """Summed per-image event counts, cached per ``(layers, arch)``."""
+    return _network_event_totals(layers, arch)
 
 
-def conv_events(layer: ConvSpec) -> Events:
+def events_for_layers(layers, arch: ArchSpec = DEFAULT_ARCH) -> Events:
+    return Events(**network_event_totals(tuple(layers), arch))
+
+
+def conv_events(layer: ConvSpec, arch: ArchSpec = DEFAULT_ARCH) -> Events:
     """Closed-form per-image event counts — validated vs COMGridSim.
 
     Thin scalar wrapper over the batched path (one-row LayerTable).
     """
-    return events_for_layers((layer,))
+    return events_for_layers((layer,), arch)
 
 
-def fc_events(layer: FCSpec) -> Events:
-    return events_for_layers((layer,))
+def fc_events(layer: FCSpec, arch: ArchSpec = DEFAULT_ARCH) -> Events:
+    return events_for_layers((layer,), arch)
 
 
-def onchip_pj_from_events(ev: Dict[str, "np.ndarray | int | float"]):
+def onchip_pj_from_events(ev: Dict[str, "np.ndarray | int | float"],
+                          arch: ArchSpec = DEFAULT_ARCH):
     """Tab. III on-chip energy (pJ) from event counts.
 
     Accepts scalars or broadcastable NumPy arrays, so the same expression
     serves the scalar ``DominoModel`` API and the batched sweep engine.
+    Component energies come from ``arch.energy`` and are rescaled to the
+    spec's technology corner by ``arch.energy_scale()`` (x1.0 at 45nm/1V).
     """
+    en = arch.energy
     # partial-sum movement: wormhole pass-through — wire/register energy
     # per bit-hop + the ROFM adder on arrival (no per-chunk buffering)
-    pj = ev["ps_bits"] * LINK_PJ_PER_BIT
-    pj = pj + ev["adds"] * N_M * E.ADDER_PJ_8B
+    pj = ev["ps_bits"] * en.link_pj_per_bit
+    pj = pj + ev["adds"] * arch.n_m * en.adder_pj_8b
     # control + schedule-table read per executed instruction (per hop;
     # clock-gated when no packet in flight)
     pj = pj + (ev["ps_hops"] + ev["ifm_hops"]) * (
-        E.ROFM_CTRL_PJ + E.RIFM_CTRL_PJ + E.SCHED_TABLE_PJ
+        en.rofm_ctrl_pj + en.rifm_ctrl_pj + en.sched_table_pj
     )
     # IFM streaming: wire energy per hop + one RIFM 256B buffer access
     # per K-row reuse window (in-buffer shifting, paper §II-B)
-    pj = pj + ev["ifm_bits"] * LINK_PJ_PER_BIT
-    pj = pj + (ev["ifm_hops"] / 3.0) * E.RIFM_BUFFER_PJ
+    pj = pj + ev["ifm_bits"] * en.link_pj_per_bit
+    pj = pj + (ev["ifm_hops"] / 3.0) * en.rifm_buffer_pj
     # group-sum queueing in the 16KiB ROFM data buffer
-    pj = pj + (ev["buf_push"] + ev["buf_pop"]) * E.DATA_BUFFER_PJ
+    pj = pj + (ev["buf_push"] + ev["buf_pop"]) * en.data_buffer_pj
     # inter-memory computing (Tab. II functions)
-    pj = pj + ev["act"] * N_M * E.ACT_PJ_8B
-    pj = pj + ev["pool_cmp"] * N_M * E.POOL_PJ_8B
-    return pj
+    pj = pj + ev["act"] * arch.n_m * en.act_pj_8b
+    pj = pj + ev["pool_cmp"] * arch.n_m * en.pool_pj_8b
+    return pj * arch.energy_scale()
 
 
 def offchip_values_img(allocs) -> float:
@@ -349,15 +362,23 @@ class PowerBreakdown:
 
 
 class DominoModel:
-    """Full-network Domino evaluation (paper Tab. IV columns)."""
+    """Full-network Domino evaluation (paper Tab. IV columns).
 
-    def __init__(self, layers: List, *, precision_bits: int = 8):
+    ``arch`` carries every architecture knob (geometry, tiles/chip, clocks,
+    energy table); ``precision_bits`` overrides ``arch.precision_bits`` for
+    backward compatibility with the pre-`ArchSpec` signature.
+    """
+
+    def __init__(self, layers: List, *, arch: ArchSpec = DEFAULT_ARCH,
+                 precision_bits: Optional[int] = None):
         self.layers = layers
-        # shared frozen allocations (cached across models of one network)
-        self.allocs: List[TileAlloc] = list(map_network_cached(tuple(layers)))
+        self.arch = arch
+        # shared frozen allocations (cached across models of one network
+        # x architecture pair)
+        self.allocs: List[TileAlloc] = list(map_network_cached(tuple(layers), arch))
         self.n_tiles = sum(a.n_tiles for a in self.allocs)
         self.n_chips = total_chips(self.allocs)
-        self.bits = precision_bits
+        self.bits = arch.precision_bits if precision_bits is None else precision_bits
 
     # ---- structure ----
     def tiles_per_network(self) -> int:
@@ -370,11 +391,11 @@ class DominoModel:
         tiles without adding copies, so we conservatively take the geometric
         mean of {1, full-replication}."""
         chips = n_chips or self.n_chips
-        return max(1.0, (chips * TILES_PER_CHIP) / self.n_tiles)
+        return max(1.0, (chips * self.arch.tiles_per_chip) / self.n_tiles)
 
     # ---- time ----
     def exec_time_us(self) -> float:
-        """Latency of one image through the pipe at the 10MHz step clock."""
+        """Latency of one image through the pipe at the instruction step clock."""
         fill = 0.0
         steady = 0.0
         for l in self.layers:
@@ -382,10 +403,10 @@ class DominoModel:
                 fill += conv_period(l) / 2
                 steady = max(steady, float(l.h_out * l.w_out))
             else:
-                cb = math.ceil(l.c_in / N_C)
-                mb = math.ceil(l.c_out / N_M)
+                cb = math.ceil(l.c_in / self.arch.n_c)
+                mb = math.ceil(l.c_out / self.arch.n_m)
                 fill += cb + mb * 2
-        return (steady + fill) / E.STEP_HZ * 1e6
+        return (steady + fill) / self.arch.step_hz * 1e6
 
     def bottleneck_px(self) -> float:
         """Steady-state cycles/img: output pixels of the largest conv."""
@@ -398,27 +419,29 @@ class DominoModel:
         """Residual skip joins (Bp shortcut via the RIFM) stall the pipeline
         while both operands synchronize — "skip operations ... affect
         performances slightly" (§IV-B1); calibrated stall factor."""
-        return SKIP_STALL if any(
+        return self.arch.skip_stall if any(
             isinstance(l, ConvSpec) and l.residual_from for l in self.layers
         ) else 1.0
 
     def throughput_img_s(self, n_chips: Optional[int] = None) -> float:
-        per_copy = FDM_FACTOR * E.STEP_HZ / self.bottleneck_px()
-        return per_copy * self.copies(n_chips) * PIPELINE_EFF * self.skip_stall()
+        per_copy = self.arch.fdm_factor * self.arch.step_hz / self.bottleneck_px()
+        return per_copy * self.copies(n_chips) * self.arch.pipeline_eff \
+            * self.skip_stall()
 
     # ---- energy ----
     def events(self) -> Events:
-        return events_for_layers(self.layers)
+        return events_for_layers(self.layers, self.arch)
 
     def onchip_energy_img_j(self) -> float:
-        ev = network_event_totals(tuple(self.layers))
-        return float(onchip_pj_from_events(ev)) * 1e-12
+        ev = network_event_totals(tuple(self.layers), self.arch)
+        return float(onchip_pj_from_events(ev, self.arch)) * 1e-12
 
     def offchip_bits_img(self) -> float:
         return offchip_values_img(self.allocs) * self.bits
 
     def offchip_energy_img_j(self) -> float:
-        return self.offchip_bits_img() * E.INTERCHIP_PJ_PER_BIT * 1e-12
+        return self.offchip_bits_img() * self.arch.energy.interchip_pj_per_bit \
+            * self.arch.energy_scale() * 1e-12
 
     def total_ops(self) -> float:
         return float(sum(l.ops for l in self.layers))
@@ -439,7 +462,7 @@ class DominoModel:
         e_cim = ops * e_mac_pj * 1e-12
         e_total = e_on + e_off + e_cim
         ce = ops / e_total / 1e12  # TOPS/W
-        area = area_mm2 if area_mm2 else self.n_tiles * E.tile_area_um2() / 1e6
+        area = area_mm2 if area_mm2 else self.n_tiles * self.arch.tile_area_um2() / 1e6
         return dict(
             exec_us=self.exec_time_us(),
             img_s=img_s,
@@ -451,7 +474,7 @@ class DominoModel:
             ops=ops,
             area_mm2=area,
             thr_tops_mm2=ops * img_s / 1e12 / area,
-            img_s_per_core=img_s / (chips * TILES_PER_CHIP),
+            img_s_per_core=img_s / (chips * self.arch.tiles_per_chip),
             n_chips=chips,
             n_tiles=self.n_tiles,
         )

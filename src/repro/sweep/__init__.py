@@ -1,13 +1,28 @@
 """Batched Domino design-space exploration.
 
-``SweepGrid`` (validation-first scenario schema) x ``run_sweep`` (vectorized
-evaluation of every Tab. IV column over the whole grid in one shot). The
-batched results are asserted equal to per-scenario ``DominoModel.evaluate``
-by the golden regression tests.
+``SweepGrid`` (validation-first scenario schema, including the `ArchSpec`
+axes ``tiles_per_chip`` / ``n_c`` / ``n_m`` / ``node_nm``) x ``run_sweep``
+(vectorized evaluation of every Tab. IV column over the whole grid in one
+shot, on a pluggable backend: ``"numpy"`` is the golden oracle, ``"jax"``
+the jitted kernel for 1e5+-scenario grids). The batched results are
+asserted equal to per-scenario ``DominoModel.evaluate`` by the golden
+regression tests; the JAX backend is golden-tested against the NumPy one.
 """
-from repro.sweep.engine import COLUMNS, SweepResult, network_summary, run_sweep
+from repro.core.arch import DEFAULT_ARCH, ArchSpec
+from repro.sweep.engine import (
+    BACKENDS,
+    COLUMNS,
+    ScenarioBatch,
+    SweepResult,
+    build_batch,
+    evaluate_scenario,
+    network_summary,
+    register_backend,
+    run_sweep,
+)
 from repro.sweep.registry import available_networks, resolve_network
 from repro.sweep.scenario import (
+    AXES,
     Precision,
     Scenario,
     SweepGrid,
@@ -15,14 +30,22 @@ from repro.sweep.scenario import (
 )
 
 __all__ = [
+    "AXES",
+    "ArchSpec",
+    "BACKENDS",
     "COLUMNS",
+    "DEFAULT_ARCH",
     "Precision",
     "Scenario",
+    "ScenarioBatch",
     "SweepGrid",
     "SweepResult",
     "SweepValidationError",
     "available_networks",
+    "build_batch",
+    "evaluate_scenario",
     "network_summary",
+    "register_backend",
     "resolve_network",
     "run_sweep",
 ]

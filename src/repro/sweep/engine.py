@@ -1,31 +1,36 @@
-"""Batched design-space sweep engine.
+"""Batched design-space sweep engine with pluggable evaluation backends.
 
-Evaluates a whole ``SweepGrid`` in one shot. The per-network, scenario-
-independent quantities (event totals via the vectorized per-layer closed
-forms, on-chip energy, mapping, pipeline structure) are computed once per
-network and memoized; the scenario-dependent Tab. IV columns are then pure
-NumPy array expressions over the scenario axis. The arithmetic mirrors
-``DominoModel.evaluate`` operation-for-operation, so batched and scalar
-results agree to the last ulp — the golden regression tests assert 1e-9.
+Evaluates a whole ``SweepGrid`` in one shot. The scenario-independent
+quantities (event totals via the vectorized per-layer closed forms, on-chip
+energy, mapping, pipeline structure) are computed once per *(network,
+architecture)* combo and memoized; the scenario-dependent Tab. IV columns
+are then pure array expressions over the stacked scenario axes.
+
+Backends (``run_sweep(grid, backend=...)``):
+
+* ``"numpy"`` — the golden oracle. Mirrors ``DominoModel.evaluate``
+  operation-for-operation, so batched and scalar results agree to the last
+  ulp — the golden regression tests assert 1e-9.
+* ``"jax"``   — ``repro.sweep.backend_jax``: the same column math lowered
+  to a single jitted kernel over the stacked scenario arrays, golden-tested
+  against the NumPy oracle to 1e-6. Registered lazily on first use.
+
+Third-party backends register through :func:`register_backend`; a backend
+is any callable taking a :class:`ScenarioBatch` and returning the
+``COLUMNS`` dict of ``(n_scenarios,)`` float64 arrays in grid row-major
+order.
 """
 from __future__ import annotations
 
 import time
-from collections import defaultdict
 from dataclasses import dataclass
 from functools import lru_cache
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import energy as E
-from repro.core.mapping import TILES_PER_CHIP
-from repro.core.simulator import (
-    FDM_FACTOR,
-    PIPELINE_EFF,
-    DominoModel,
-    offchip_values_img,
-)
+from repro.core.arch import DEFAULT_ARCH, ArchSpec
+from repro.core.simulator import DominoModel, offchip_values_img
 from repro.sweep.registry import resolve_network
 from repro.sweep.scenario import Scenario, SweepGrid, validate_scenario
 
@@ -37,10 +42,17 @@ COLUMNS: Tuple[str, ...] = (
     "n_chips", "n_tiles",
 )
 
+# Scenario-independent per-(network, arch) scalars the backends consume,
+# stacked over the (network, tiles_per_chip, n_c, n_m, node_nm) combo axes.
+SUMMARY_FIELDS: Tuple[str, ...] = (
+    "n_tiles", "exec_us", "onchip_j", "offchip_values", "ops",
+    "bottleneck_px", "skip_stall", "area_mm2", "offchip_pj_per_bit",
+)
+
 
 @dataclass(frozen=True)
 class NetworkSummary:
-    """Scenario-independent per-network quantities (all cached)."""
+    """Scenario-independent per-(network, architecture) quantities."""
 
     name: str
     n_tiles: int
@@ -51,12 +63,14 @@ class NetworkSummary:
     ops: float
     bottleneck_px: float      # steady-state cycles/img of the largest conv
     skip_stall: float         # residual-join pipeline stall factor
+    area_mm2: float           # minimal-mapping tile area
+    offchip_pj_per_bit: float  # inter-chip pJ/bit at the arch's node corner
 
 
 @lru_cache(maxsize=None)
-def network_summary(name: str) -> NetworkSummary:
+def _network_summary(name: str, arch: ArchSpec) -> NetworkSummary:
     layers = resolve_network(name)
-    model = DominoModel(list(layers))
+    model = DominoModel(list(layers), arch=arch)
     return NetworkSummary(
         name=name,
         n_tiles=model.n_tiles,
@@ -67,22 +81,211 @@ def network_summary(name: str) -> NetworkSummary:
         ops=model.total_ops(),
         bottleneck_px=model.bottleneck_px(),
         skip_stall=model.skip_stall(),
+        area_mm2=model.n_tiles * arch.tile_area_um2() / 1e6,
+        offchip_pj_per_bit=arch.energy.interchip_pj_per_bit * arch.energy_scale(),
     )
 
 
-@dataclass
-class SweepResult:
-    """Columnar sweep output: ``columns[c][i]`` is Tab. IV column ``c`` for
-    ``scenarios[i]`` (grid row-major order)."""
+def network_summary(name: str, arch: ArchSpec = DEFAULT_ARCH) -> NetworkSummary:
+    """Scenario-independent summary, cached per ``(name, arch)`` (the
+    default-arg call shares the explicit-``DEFAULT_ARCH`` cache line)."""
+    return _network_summary(name, arch)
 
-    grid: SweepGrid
-    scenarios: List[Scenario]
-    columns: Dict[str, np.ndarray]
-    engine_wall_s: float
+
+# the engine's cache the repeat-sweep tests introspect
+network_summary.cache_info = _network_summary.cache_info
+network_summary.cache_clear = _network_summary.cache_clear
+
+
+@dataclass
+class ScenarioBatch:
+    """Backend input: the grid lowered to stacked arrays.
+
+    ``shape`` is the 8-axis grid shape in ``scenario.AXES`` order. The
+    cheap axes arrive as small per-axis value arrays (``chips``, ``bits``,
+    ``e_mac``, ``tpc``); the expensive, architecture-dependent quantities
+    arrive as ``summary[field]`` arrays over the (network, tiles_per_chip,
+    n_c, n_m, node_nm) combo axes. Backends broadcast both to the full
+    grid, evaluate the column closed forms elementwise, and return
+    row-major ``(n_scenarios,)`` columns — scenario ordering is fixed by
+    ``SweepGrid.scenarios()`` and shared by every backend.
+    """
+
+    shape: Tuple[int, ...]
+    chips: np.ndarray          # (len(chip_counts),) float64
+    bits: np.ndarray           # (len(precisions),) float64
+    e_mac: np.ndarray          # (len(e_mac_pj),) float64
+    tpc: np.ndarray            # (len(tiles_per_chip),) float64
+    summary: Dict[str, np.ndarray]  # each (l_net, l_tpc, l_nc, l_nm, l_node)
+    fdm_factor: float
+    step_hz: float
+    pipeline_eff: float
 
     @property
     def n_scenarios(self) -> int:
-        return len(self.scenarios)
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+    def axis_view(self, values: np.ndarray, axis: int) -> np.ndarray:
+        """A per-axis value array reshaped for broadcast over ``shape``."""
+        shp = [1] * len(self.shape)
+        shp[axis] = len(values)
+        return values.reshape(shp)
+
+    def summary_view(self, field: str) -> np.ndarray:
+        """A summary array reshaped for broadcast over ``shape``."""
+        l = self.shape
+        return self.summary[field].reshape(
+            l[0], 1, 1, 1, l[4], l[5], l[6], l[7]
+        )
+
+
+def build_batch(grid: SweepGrid, arch: ArchSpec = DEFAULT_ARCH) -> ScenarioBatch:
+    """Lower a validated grid to backend input arrays.
+
+    Per-(network, architecture) summaries are computed through the scalar
+    model stack (and cached on the hashable ``(name, ArchSpec)`` key);
+    everything else is a cheap axis array. No per-scenario Python objects
+    are materialized — this is what lets 1e5+-scenario grids run.
+    """
+    shape = grid.shape
+    summary = {
+        f: np.empty((shape[0], shape[4], shape[5], shape[6], shape[7]),
+                    dtype=np.float64)
+        for f in SUMMARY_FIELDS
+    }
+    for i0, net in enumerate(grid.networks):
+        for i4, tpc in enumerate(grid.tiles_per_chip):
+            for i5, nc in enumerate(grid.n_c):
+                for i6, nm in enumerate(grid.n_m):
+                    for i7, node in enumerate(grid.node_nm):
+                        arch_c = arch.replace(
+                            tiles_per_chip=int(tpc), n_c=int(nc),
+                            n_m=int(nm), node_nm=float(node),
+                        )
+                        s = network_summary(net, arch_c)
+                        for f in SUMMARY_FIELDS:
+                            summary[f][i0, i4, i5, i6, i7] = getattr(s, f)
+    return ScenarioBatch(
+        shape=shape,
+        chips=np.asarray(grid.chip_counts, dtype=np.float64),
+        bits=np.asarray(grid.precisions, dtype=np.float64),
+        e_mac=np.asarray(grid.e_mac_pj, dtype=np.float64),
+        tpc=np.asarray(grid.tiles_per_chip, dtype=np.float64),
+        summary=summary,
+        fdm_factor=float(arch.fdm_factor),
+        step_hz=float(arch.step_hz),
+        pipeline_eff=float(arch.pipeline_eff),
+    )
+
+
+def numpy_backend(batch: ScenarioBatch) -> Dict[str, np.ndarray]:
+    """The golden oracle: NumPy broadcasting over the stacked scenario
+    arrays, operation-for-operation the arithmetic of
+    ``DominoModel.evaluate`` (asserted to 1e-9 by the golden tests)."""
+    chips = batch.axis_view(batch.chips, 1)
+    bits = batch.axis_view(batch.bits, 2)
+    e_mac = batch.axis_view(batch.e_mac, 3)
+    tpc = batch.axis_view(batch.tpc, 4)
+    n_tiles = batch.summary_view("n_tiles")
+    exec_us = batch.summary_view("exec_us")
+    onchip_j = batch.summary_view("onchip_j")
+    offchip_values = batch.summary_view("offchip_values")
+    ops = batch.summary_view("ops")
+    bottleneck_px = batch.summary_view("bottleneck_px")
+    skip_stall = batch.summary_view("skip_stall")
+    area = batch.summary_view("area_mm2")
+    offchip_pj_per_bit = batch.summary_view("offchip_pj_per_bit")
+
+    # throughput: steady-state rate x replicas x pipeline/skip stalls
+    # (same expression order as DominoModel.throughput_img_s)
+    per_copy = batch.fdm_factor * batch.step_hz / bottleneck_px
+    copies = np.maximum(1.0, (chips * tpc) / n_tiles)
+    img_s = per_copy * copies * batch.pipeline_eff * skip_stall
+
+    # energy per image: on-chip events + precision-scaled off-chip
+    # traffic + substituted CIM arrays
+    e_off = offchip_values * bits * offchip_pj_per_bit * 1e-12
+    e_cim = ops * e_mac * 1e-12
+    e_total = onchip_j + e_off + e_cim
+
+    cols = dict(
+        exec_us=exec_us,
+        img_s=img_s,
+        power_w=e_total * img_s,
+        onchip_w=onchip_j * img_s,
+        offchip_w=e_off * img_s,
+        cim_w=e_cim * img_s,
+        ce_tops_w=ops / e_total / 1e12,
+        ops=ops,
+        area_mm2=area,
+        thr_tops_mm2=ops * img_s / 1e12 / area,
+        img_s_per_core=img_s / (chips * tpc),
+        n_chips=chips,
+        n_tiles=n_tiles,
+    )
+    shape = batch.shape
+    return {
+        c: np.ascontiguousarray(np.broadcast_to(v, shape)).reshape(-1)
+        for c, v in cols.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+SweepBackend = Callable[[ScenarioBatch], Dict[str, np.ndarray]]
+
+BACKENDS: Dict[str, SweepBackend] = {"numpy": numpy_backend}
+
+
+def register_backend(name: str, fn: SweepBackend) -> None:
+    """Register an evaluation backend under ``name`` (overwrites)."""
+    BACKENDS[name] = fn
+
+
+def _resolve_backend(name: str) -> SweepBackend:
+    if name == "jax" and name not in BACKENDS:
+        # lazy: importing registers it, and keeps JAX off the NumPy path
+        import repro.sweep.backend_jax  # noqa: F401
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown sweep backend {name!r}; available: {sorted(BACKENDS)}"
+        ) from None
+
+
+class SweepResult:
+    """Columnar sweep output: ``columns[c][i]`` is Tab. IV column ``c`` for
+    scenario ``i`` in grid row-major order (``grid.scenarios()`` order).
+
+    ``scenarios`` is materialized lazily — backends work on stacked arrays
+    and never build the per-scenario objects; 1e5+-row results stay cheap
+    unless a caller actually asks for the row view.
+    """
+
+    def __init__(self, grid: SweepGrid, columns: Dict[str, np.ndarray],
+                 engine_wall_s: float, backend: str = "numpy",
+                 scenarios: Optional[List[Scenario]] = None):
+        self.grid = grid
+        self.columns = columns
+        self.engine_wall_s = engine_wall_s
+        self.backend = backend
+        self._scenarios = scenarios
+
+    @property
+    def scenarios(self) -> List[Scenario]:
+        if self._scenarios is None:
+            self._scenarios = self.grid.scenarios()
+        return self._scenarios
+
+    @property
+    def n_scenarios(self) -> int:
+        return self.grid.n_scenarios
 
     def rows(self) -> List[Dict]:
         """Row-oriented view: one dict per scenario (params + columns)."""
@@ -91,75 +294,45 @@ class SweepResult:
             for i, s in enumerate(self.scenarios)
         ]
 
-    def as_dict(self) -> Dict:
-        return dict(
+    def as_dict(self, include_rows: Optional[bool] = None) -> Dict:
+        """JSON-ready payload. ``include_rows=None`` auto-omits the row view
+        above 10_000 scenarios (the columns stay available in-process)."""
+        if include_rows is None:
+            include_rows = self.n_scenarios <= 10_000
+        out = dict(
             grid=self.grid.as_dict(),
             n_scenarios=self.n_scenarios,
             engine_wall_s=self.engine_wall_s,
+            backend=self.backend,
             columns=list(COLUMNS),
-            rows=self.rows(),
         )
+        if include_rows:
+            out["rows"] = self.rows()
+        return out
 
 
-def run_sweep(grid: SweepGrid) -> SweepResult:
-    """Evaluate every scenario of a validated grid, batched per network."""
+def run_sweep(grid: SweepGrid, backend: str = "numpy",
+              arch: ArchSpec = DEFAULT_ARCH) -> SweepResult:
+    """Evaluate every scenario of a validated grid on the chosen backend.
+
+    ``arch`` is the base architecture template; the grid's architecture
+    axes (``tiles_per_chip``, ``n_c``, ``n_m``, ``node_nm``) are
+    substituted into it per scenario.
+    """
+    fn = _resolve_backend(backend)
     t0 = time.perf_counter()
-    scenarios = grid.scenarios()
-    n = len(scenarios)
-    cols = {c: np.empty(n, dtype=np.float64) for c in COLUMNS}
-
-    by_net: Dict[str, List[int]] = defaultdict(list)
-    for i, s in enumerate(scenarios):
-        by_net[s.network].append(i)
-
-    for net, idxs in by_net.items():
-        s = network_summary(net)
-        idx = np.asarray(idxs, dtype=np.intp)
-        chips = np.array([scenarios[i].n_chips for i in idxs], dtype=np.float64)
-        bits = np.array([scenarios[i].precision_bits for i in idxs], dtype=np.float64)
-        e_mac = np.array([scenarios[i].e_mac_pj for i in idxs], dtype=np.float64)
-
-        # throughput: steady-state rate x replicas x pipeline/skip stalls
-        # (same expression order as DominoModel.throughput_img_s)
-        per_copy = FDM_FACTOR * E.STEP_HZ / s.bottleneck_px
-        copies = np.maximum(1.0, (chips * TILES_PER_CHIP) / s.n_tiles)
-        img_s = per_copy * copies * PIPELINE_EFF * s.skip_stall
-
-        # energy per image: on-chip events + precision-scaled off-chip
-        # traffic + substituted CIM arrays
-        e_on = s.onchip_j
-        e_off = s.offchip_values * bits * E.INTERCHIP_PJ_PER_BIT * 1e-12
-        e_cim = s.ops * e_mac * 1e-12
-        e_total = e_on + e_off + e_cim
-
-        area = s.n_tiles * E.tile_area_um2() / 1e6
-
-        cols["exec_us"][idx] = s.exec_us
-        cols["img_s"][idx] = img_s
-        cols["power_w"][idx] = e_total * img_s
-        cols["onchip_w"][idx] = e_on * img_s
-        cols["offchip_w"][idx] = e_off * img_s
-        cols["cim_w"][idx] = e_cim * img_s
-        cols["ce_tops_w"][idx] = s.ops / e_total / 1e12
-        cols["ops"][idx] = s.ops
-        cols["area_mm2"][idx] = area
-        cols["thr_tops_mm2"][idx] = s.ops * img_s / 1e12 / area
-        cols["img_s_per_core"][idx] = img_s / (chips * TILES_PER_CHIP)
-        cols["n_chips"][idx] = chips
-        cols["n_tiles"][idx] = s.n_tiles
-
+    batch = build_batch(grid, arch)
+    cols = fn(batch)
     return SweepResult(
-        grid=grid, scenarios=scenarios, columns=cols,
-        engine_wall_s=time.perf_counter() - t0,
+        grid=grid, columns=cols, engine_wall_s=time.perf_counter() - t0,
+        backend=backend,
     )
 
 
-def evaluate_scenario(s: Scenario) -> Dict[str, float]:
+def evaluate_scenario(s: Scenario, arch: ArchSpec = DEFAULT_ARCH) -> Dict[str, float]:
     """Scalar single-scenario evaluation through the reference path
     (``DominoModel.evaluate``) — the oracle the batched engine is golden-
     tested against."""
     validate_scenario(s)
-    model = DominoModel(
-        list(resolve_network(s.network)), precision_bits=s.precision_bits
-    )
+    model = DominoModel(list(resolve_network(s.network)), arch=s.arch(arch))
     return model.evaluate(s.e_mac_pj, n_chips=s.n_chips)

@@ -1,12 +1,14 @@
 """Validation-first sweep scenario schema (the SNIPPETS "FastSim" idiom).
 
 A ``SweepGrid`` is the single, self-contained contract for a design-space
-sweep: which networks, how many chips, at what precision, and which
-substituted CIM-array energy points. Every grid is rigorously validated at
-construction — a controlled vocabulary (``Precision`` enum, the network
-registry) plus explicit bounds checks guarantee the engine only ever runs on
-well-formed input, and malformed grids are rejected upfront with actionable
-errors that name the offending value.
+sweep: which networks, how many chips, at what precision, which substituted
+CIM-array energy points — and, since the `ArchSpec` redesign, which
+*architectures*: tiles per chip, CIM array geometry (``n_c`` x ``n_m``),
+and technology node are first-class grid axes. Every grid is rigorously
+validated at construction — a controlled vocabulary (``Precision`` enum,
+the network registry) plus explicit bounds checks guarantee the engine only
+ever runs on well-formed input, and malformed grids are rejected upfront
+with actionable errors that name the offending value.
 """
 from __future__ import annotations
 
@@ -16,6 +18,7 @@ from enum import IntEnum
 from itertools import product
 from typing import Dict, List, Sequence, Tuple
 
+from repro.core.arch import DEFAULT_ARCH, ArchSpec
 from repro.sweep.registry import available_networks
 
 
@@ -33,14 +36,35 @@ class Precision(IntEnum):
     INT16 = 16
 
 
+# Grid axes, in cross-product (row-major) order: the original four, then the
+# ArchSpec axes appended so pre-`ArchSpec` grids keep their scenario order.
+AXES: Tuple[str, ...] = (
+    "networks", "chip_counts", "precisions", "e_mac_pj",
+    "tiles_per_chip", "n_c", "n_m", "node_nm",
+)
+
+
 @dataclass(frozen=True)
 class Scenario:
-    """One evaluation point: network x chip count x precision x CIM energy."""
+    """One evaluation point: network x chip count x precision x CIM energy
+    x architecture (tiles/chip, array geometry, technology node)."""
 
     network: str
     n_chips: int
     precision_bits: int
     e_mac_pj: float
+    tiles_per_chip: int = DEFAULT_ARCH.tiles_per_chip
+    n_c: int = DEFAULT_ARCH.n_c
+    n_m: int = DEFAULT_ARCH.n_m
+    node_nm: float = DEFAULT_ARCH.node_nm
+
+    def arch(self, base: ArchSpec = DEFAULT_ARCH) -> ArchSpec:
+        """The ``ArchSpec`` this scenario evaluates: ``base`` with the
+        scenario's architecture axes (and precision) substituted in."""
+        return base.replace(
+            tiles_per_chip=self.tiles_per_chip, n_c=self.n_c, n_m=self.n_m,
+            node_nm=self.node_nm, precision_bits=self.precision_bits,
+        )
 
     def as_dict(self) -> Dict:
         return asdict(self)
@@ -78,6 +102,34 @@ def _check_e_mac(e, problems: List[str]) -> None:
         problems.append(f"e_mac_pj {e} must be > 0 (energy per CIM OP, pJ)")
 
 
+def _check_pos_int(v, label: str, problems: List[str]) -> None:
+    if isinstance(v, bool) or not isinstance(v, int):
+        problems.append(f"{label} {v!r} must be an int (got {type(v).__name__})")
+    elif v < 1:
+        problems.append(f"{label} {v} must be >= 1")
+
+
+def _check_node(n, problems: List[str]) -> None:
+    if not isinstance(n, (int, float)) or isinstance(n, bool):
+        problems.append(f"node_nm {n!r} must be a number (nm)")
+    elif not math.isfinite(n) or not 1 <= n <= 250:
+        problems.append(
+            f"node_nm {n!r} must be a finite technology node in [1, 250] nm"
+        )
+
+
+_AXIS_CHECKS = {
+    "networks": _check_network,
+    "chip_counts": _check_chips,
+    "precisions": _check_precision,
+    "e_mac_pj": _check_e_mac,
+    "tiles_per_chip": lambda v, p: _check_pos_int(v, "tiles_per_chip", p),
+    "n_c": lambda v, p: _check_pos_int(v, "n_c (CIM rows)", p),
+    "n_m": lambda v, p: _check_pos_int(v, "n_m (CIM cols)", p),
+    "node_nm": _check_node,
+}
+
+
 def _unique(seq: Sequence, label: str, problems: List[str]) -> None:
     seen = set()
     for v in seq:
@@ -97,6 +149,10 @@ def validate_scenario(s: Scenario) -> Scenario:
     _check_chips(s.n_chips, problems)
     _check_precision(s.precision_bits, problems)
     _check_e_mac(s.e_mac_pj, problems)
+    _check_pos_int(s.tiles_per_chip, "tiles_per_chip", problems)
+    _check_pos_int(s.n_c, "n_c (CIM rows)", problems)
+    _check_pos_int(s.n_m, "n_m (CIM cols)", problems)
+    _check_node(s.node_nm, problems)
     if problems:
         raise SweepValidationError("\n".join(problems))
     return s
@@ -107,22 +163,31 @@ class SweepGrid:
     """The full cross-product grid. Axes are validated upfront; the engine
     never sees a malformed grid.
 
-    ``networks``    — names from :func:`repro.sweep.registry.available_networks`
-                      (the four Tab. IV CNNs plus ``llm:<arch>`` bridges).
-    ``chip_counts`` — Domino chip counts (>= 1) to replicate onto.
-    ``precisions``  — activation/weight bit-widths (Precision enum values).
-    ``e_mac_pj``    — substituted CIM array energies, pJ per 8b OP at
-                      45nm/1V (the paper's plug-in parameter).
+    ``networks``       — names from :func:`repro.sweep.registry.available_networks`
+                         (the four Tab. IV CNNs plus ``llm:<arch>`` bridges).
+    ``chip_counts``    — Domino chip counts (>= 1) to replicate onto.
+    ``precisions``     — activation/weight bit-widths (Precision enum values).
+    ``e_mac_pj``       — substituted CIM array energies, pJ per 8b OP at
+                         45nm/1V (the paper's plug-in parameter).
+    ``tiles_per_chip`` — tiles per chip (ArchSpec axis; paper: 240).
+    ``n_c`` / ``n_m``  — CIM array rows/columns per tile (ArchSpec axes;
+                         paper: 256 x 256).
+    ``node_nm``        — technology node in nm (ArchSpec axis; energies are
+                         Stillmaker-Baas-rescaled from the 45nm table).
     """
 
     networks: Tuple[str, ...]
     chip_counts: Tuple[int, ...]
     precisions: Tuple[int, ...] = (int(Precision.INT8),)
     e_mac_pj: Tuple[float, ...] = field(default_factory=lambda: (0.1,))
+    tiles_per_chip: Tuple[int, ...] = (DEFAULT_ARCH.tiles_per_chip,)
+    n_c: Tuple[int, ...] = (DEFAULT_ARCH.n_c,)
+    n_m: Tuple[int, ...] = (DEFAULT_ARCH.n_m,)
+    node_nm: Tuple[float, ...] = (DEFAULT_ARCH.node_nm,)
 
     def __post_init__(self):
         # normalize: accept any sequence, store tuples (frozen dataclass)
-        for name in ("networks", "chip_counts", "precisions", "e_mac_pj"):
+        for name in AXES:
             v = getattr(self, name)
             if isinstance(v, (str, bytes)) or not isinstance(v, Sequence):
                 raise SweepValidationError(
@@ -130,53 +195,60 @@ class SweepGrid:
                 )
             object.__setattr__(self, name, tuple(v))
         problems: List[str] = []
-        for name in ("networks", "chip_counts", "precisions", "e_mac_pj"):
-            if not getattr(self, name):
+        for name in AXES:
+            values = getattr(self, name)
+            if not values:
                 problems.append(f"{name} is empty — the grid needs at least one value")
-        for n in self.networks:
-            _check_network(n, problems)
-        for c in self.chip_counts:
-            _check_chips(c, problems)
-        for p in self.precisions:
-            _check_precision(p, problems)
-        for e in self.e_mac_pj:
-            _check_e_mac(e, problems)
-        for seq, label in ((self.networks, "networks"),
-                           (self.chip_counts, "chip_counts"),
-                           (self.precisions, "precisions"),
-                           (self.e_mac_pj, "e_mac_pj")):
-            _unique(seq, label, problems)
+            check = _AXIS_CHECKS[name]
+            for v in values:
+                check(v, problems)
+            _unique(values, name, problems)
         if problems:
             raise SweepValidationError("invalid sweep grid:\n" + "\n".join(problems))
 
     @property
+    def shape(self) -> Tuple[int, ...]:
+        """Per-axis lengths, in ``AXES`` (row-major product) order."""
+        return tuple(len(getattr(self, name)) for name in AXES)
+
+    @property
     def n_scenarios(self) -> int:
-        return (len(self.networks) * len(self.chip_counts)
-                * len(self.precisions) * len(self.e_mac_pj))
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
 
     def scenarios(self) -> List[Scenario]:
-        """The cross-product, in deterministic (network, chips, precision,
-        e_mac) row-major order."""
+        """The cross-product, in deterministic row-major ``AXES`` order
+        (network slowest; the architecture axes appended fastest)."""
         return [
-            Scenario(network=n, n_chips=c, precision_bits=int(p), e_mac_pj=float(e))
-            for n, c, p, e in product(
-                self.networks, self.chip_counts, self.precisions, self.e_mac_pj
+            Scenario(network=n, n_chips=c, precision_bits=int(p),
+                     e_mac_pj=float(e), tiles_per_chip=int(t), n_c=int(nc),
+                     n_m=int(nm), node_nm=float(node))
+            for n, c, p, e, t, nc, nm, node in product(
+                *(getattr(self, name) for name in AXES)
             )
         ]
 
     def as_dict(self) -> Dict:
-        return dict(networks=list(self.networks),
-                    chip_counts=list(self.chip_counts),
-                    precisions=[int(p) for p in self.precisions],
-                    e_mac_pj=[float(e) for e in self.e_mac_pj])
+        return dict(
+            networks=list(self.networks),
+            chip_counts=list(self.chip_counts),
+            precisions=[int(p) for p in self.precisions],
+            e_mac_pj=[float(e) for e in self.e_mac_pj],
+            tiles_per_chip=list(self.tiles_per_chip),
+            n_c=list(self.n_c),
+            n_m=list(self.n_m),
+            node_nm=[float(n) for n in self.node_nm],
+        )
 
     @classmethod
     def from_dict(cls, d: Dict) -> "SweepGrid":
-        extra = set(d) - {"networks", "chip_counts", "precisions", "e_mac_pj"}
+        extra = set(d) - set(AXES)
         if extra:
             raise SweepValidationError(
-                f"unknown grid fields {sorted(extra)}; expected networks, "
-                f"chip_counts, precisions, e_mac_pj"
+                f"unknown grid fields {sorted(extra)}; expected "
+                f"{', '.join(AXES)}"
             )
         missing = {"networks", "chip_counts"} - set(d)
         if missing:

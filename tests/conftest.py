@@ -7,6 +7,23 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
+# REPRO_FORCE_HYPOTHESIS_STUB=1 makes `import hypothesis` raise
+# ModuleNotFoundError even when the real package is installed, forcing every
+# property-test module onto tests/_hypothesis_stub.py. CI runs a leg with
+# this set so the stub fallback can't silently drift from the real one.
+if os.environ.get("REPRO_FORCE_HYPOTHESIS_STUB"):
+    class _BlockHypothesis:
+        def find_spec(self, name, path=None, target=None):
+            if name == "hypothesis" or name.startswith("hypothesis."):
+                raise ModuleNotFoundError(
+                    "hypothesis import blocked (REPRO_FORCE_HYPOTHESIS_STUB)",
+                    name=name,
+                )
+            return None
+
+    sys.meta_path.insert(0, _BlockHypothesis())
+    sys.modules.pop("hypothesis", None)
+
 # Tests run on the single real CPU device. Multi-device mesh tests spawn
 # subprocesses with their own XLA_FLAGS (tests/_mesh_checks.py) — the brief
 # forbids forcing a host device count globally.

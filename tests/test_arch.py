@@ -1,0 +1,161 @@
+"""ArchSpec: hash/equality/cache-key semantics, DEFAULT_ARCH bitwise
+equivalence with the deprecated module-level constants, and validation."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # stripped container: deterministic fallback
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import energy as E
+from repro.core.arch import DEFAULT_ARCH, ArchSpec, EnergyTable, node_energy_factor
+from repro.core.mapping import (
+    N_C,
+    N_M,
+    TILES_PER_CHIP,
+    ConvSpec,
+    map_network_cached,
+    tiles_for,
+)
+from repro.core.simulator import (
+    FDM_FACTOR,
+    LINK_PJ_PER_BIT,
+    PIPELINE_EFF,
+    SKIP_STALL,
+    DominoModel,
+    network_event_totals,
+)
+from repro.sweep import resolve_network
+
+
+# ---------------------------------------------------------------------------
+# DEFAULT_ARCH reproduces the pre-ArchSpec constants bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_default_arch_matches_deprecated_aliases():
+    a = DEFAULT_ARCH
+    assert (a.n_c, a.n_m, a.tiles_per_chip) == (N_C, N_M, TILES_PER_CHIP)
+    assert a.fdm_factor == FDM_FACTOR
+    assert a.pipeline_eff == PIPELINE_EFF
+    assert a.skip_stall == SKIP_STALL
+    assert a.energy.link_pj_per_bit == LINK_PJ_PER_BIT
+    assert a.step_hz == E.STEP_HZ
+    assert a.energy.rifm_buffer_pj == E.RIFM_BUFFER_PJ
+    assert a.energy.adder_pj_8b == E.ADDER_PJ_8B
+    assert a.energy.data_buffer_pj == E.DATA_BUFFER_PJ
+    assert a.energy.interchip_pj_per_bit == E.INTERCHIP_PJ_PER_BIT
+    assert a.tile_area_um2() == E.tile_area_um2()
+
+
+def test_default_energy_scale_is_exactly_one():
+    # x1.0 multiplications are bitwise identities: DEFAULT_ARCH results
+    # are those of the constant era
+    assert DEFAULT_ARCH.energy_scale() == 1.0
+    assert node_energy_factor(45) == 1.0
+
+
+def test_default_arch_evaluate_matches_legacy_signature():
+    layers = list(resolve_network("vgg11-cifar"))
+    legacy = DominoModel(layers, precision_bits=8).evaluate(0.05, n_chips=5)
+    speced = DominoModel(layers, arch=ArchSpec()).evaluate(0.05, n_chips=5)
+    for k, v in legacy.items():
+        assert speced[k] == v, k  # bitwise
+
+
+# ---------------------------------------------------------------------------
+# hash/equality/cache-key semantics
+# ---------------------------------------------------------------------------
+
+
+def test_archspec_equality_and_hash():
+    a, b = ArchSpec(), ArchSpec()
+    assert a == b and hash(a) == hash(b)
+    assert a == DEFAULT_ARCH
+    c = a.replace(n_c=128)
+    assert c != a
+    assert c.replace(n_c=256) == a  # round-trips to equality
+    assert len({a, b, c}) == 2  # usable as a set/dict/cache key
+
+
+def test_archspec_replace_revalidates():
+    with pytest.raises(ValueError, match="n_c"):
+        DEFAULT_ARCH.replace(n_c=0)
+    with pytest.raises(ValueError, match="pipeline_eff"):
+        DEFAULT_ARCH.replace(pipeline_eff=1.5)
+    with pytest.raises(ValueError, match="node_nm"):
+        DEFAULT_ARCH.replace(node_nm=float("nan"))
+    with pytest.raises(ValueError, match="tiles_per_chip"):
+        ArchSpec(tiles_per_chip=-3)
+
+
+def test_mapping_cache_keyed_on_layers_and_arch():
+    layers = resolve_network("vgg11-cifar")
+    a = map_network_cached(layers, DEFAULT_ARCH)
+    # equal specs (fresh instance) hit the same cache line
+    assert map_network_cached(layers, ArchSpec()) is a
+    # legacy default-arg call is the same key as the explicit default
+    assert map_network_cached(layers) is a
+    # a different geometry is a different key with different content
+    wide = map_network_cached(layers, DEFAULT_ARCH.replace(n_c=512, n_m=512))
+    assert wide is not a
+    assert sum(x.n_tiles for x in wide) < sum(x.n_tiles for x in a)
+
+
+def test_event_totals_cache_keyed_on_arch_geometry():
+    layers = resolve_network("vgg11-cifar")
+    base = network_event_totals(layers, DEFAULT_ARCH)
+    assert network_event_totals(layers, ArchSpec()) is base
+    halved = network_event_totals(layers, DEFAULT_ARCH.replace(n_c=128, n_m=128))
+    assert halved is not base
+    assert halved["pe_macs"] > base["pe_macs"]  # more blocks -> more chains
+
+
+# ---------------------------------------------------------------------------
+# architecture knobs actually steer the model
+# ---------------------------------------------------------------------------
+
+
+@given(nc=st.sampled_from([64, 128, 256, 512]),
+       nm=st.sampled_from([64, 128, 256, 512]))
+@settings(max_examples=12, deadline=None)
+def test_geometry_sets_tile_blocks(nc, nm):
+    arch = DEFAULT_ARCH.replace(n_c=nc, n_m=nm)
+    layer = ConvSpec("c", 3, 300, 520, 8, 8)
+    n, grid = tiles_for(layer, arch)
+    cb = -(-300 // nc)
+    mb = -(-520 // nm)
+    assert grid == (9, cb, mb) and n == 9 * cb * mb
+
+
+def test_tiles_per_chip_changes_chip_count():
+    layers = list(resolve_network("vgg16-imagenet"))
+    big = DominoModel(layers, arch=DEFAULT_ARCH.replace(tiles_per_chip=480))
+    small = DominoModel(layers, arch=DEFAULT_ARCH.replace(tiles_per_chip=60))
+    assert big.n_chips < small.n_chips
+    assert big.n_tiles == small.n_tiles  # geometry unchanged
+
+
+def test_node_scaling_scales_energy():
+    layers = list(resolve_network("vgg11-cifar"))
+    e45 = DominoModel(layers).onchip_energy_img_j()
+    arch7 = DEFAULT_ARCH.replace(node_nm=7.0)
+    e7 = DominoModel(layers, arch=arch7).onchip_energy_img_j()
+    assert e7 == pytest.approx(e45 * node_energy_factor(7.0), rel=1e-12)
+    assert e7 < e45
+
+
+def test_step_hz_scales_exec_time():
+    layers = list(resolve_network("vgg11-cifar"))
+    t10 = DominoModel(layers).exec_time_us()
+    t20 = DominoModel(layers, arch=DEFAULT_ARCH.replace(step_hz=20e6)).exec_time_us()
+    assert t20 == pytest.approx(t10 / 2, rel=1e-12)
+
+
+def test_energy_table_is_frozen_value_object():
+    t = EnergyTable()
+    assert t == DEFAULT_ARCH.energy and hash(t) == hash(DEFAULT_ARCH.energy)
+    with pytest.raises(Exception):
+        t.adder_pj_8b = 1.0
+    with pytest.raises(Exception):
+        DEFAULT_ARCH.n_c = 1

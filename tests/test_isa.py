@@ -49,6 +49,44 @@ def test_schedule_table_capacity():
         ScheduleTable([CInstr()] * 129)
 
 
+@given(n=st.integers(1, 16), extra=st.integers(1, 16))
+@settings(max_examples=20, deadline=None)
+def test_schedule_table_rejects_period_beyond_words(n, extra):
+    """period > len(words) used to IndexError inside at_cycle at runtime;
+    now it is rejected at construction with an actionable message."""
+    instrs = [CInstr()] * n
+    with pytest.raises(ValueError, match="period"):
+        ScheduleTable(instrs, period=n + extra)
+    with pytest.raises(ValueError, match="period"):
+        ScheduleTable(instrs, period=0)
+    # valid periods (1..n) still index cyclically without error
+    ts = ScheduleTable(instrs, period=n)
+    assert ts.at_cycle(n * 3 + 1) == decode(instrs[0].encode())
+
+
+def test_schedule_table_rejects_period_on_empty_table():
+    with pytest.raises(ValueError, match="period"):
+        ScheduleTable([], period=1)
+    assert ScheduleTable([]).at_cycle(0) is None
+
+
+@given(rx=st.integers(32, 64), func=st.integers(64, 128), tx=st.integers(16, 31))
+@settings(max_examples=20, deadline=None)
+def test_encode_rejects_out_of_range_fields(rx, func, tx):
+    """MInstr.encode used to silently truncate oversized fields (CInstr
+    asserted); both now raise with the offending field named."""
+    with pytest.raises(ValueError, match="rx"):
+        MInstr(rx=rx, func=Func.ADD).encode()
+    with pytest.raises(ValueError, match="func"):
+        MInstr(rx=Dir.PE, func=func).encode()
+    with pytest.raises(ValueError, match="tx"):
+        MInstr(rx=Dir.PE, func=Func.ADD, tx=tx).encode()
+    with pytest.raises(ValueError, match="rx"):
+        CInstr(rx=rx).encode()
+    with pytest.raises(ValueError, match="tx"):
+        CInstr(tx=tx).encode()  # Dir.PE is receive-only: tx has no PE bit
+
+
 @given(w=st.integers(4, 64), p=st.integers(0, 3), sp=st.integers(1, 4))
 @settings(max_examples=30, deadline=None)
 def test_periods_match_paper_formulas(w, p, sp):

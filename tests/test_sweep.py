@@ -125,6 +125,50 @@ def test_empty_axes_and_duplicates_rejected():
         SweepGrid(networks=("vgg11-cifar", "vgg11-cifar"), chip_counts=(5,))
 
 
+@given(bad=st.sampled_from([0, -1, 2.5, "240", None, True]))
+@settings(max_examples=10, deadline=None)
+def test_bad_arch_int_axes_rejected(bad):
+    for axis in ("tiles_per_chip", "n_c", "n_m"):
+        with pytest.raises(SweepValidationError) as ei:
+            SweepGrid(networks=("vgg11-cifar",), chip_counts=(5,),
+                      **{axis: (bad,)})
+        assert axis.split("_")[0] in str(ei.value)
+
+
+@given(bad=st.sampled_from([0, -45, 0.5, 251, float("nan"), float("inf"),
+                            "45nm", None]))
+@settings(max_examples=10, deadline=None)
+def test_bad_node_nm_rejected(bad):
+    with pytest.raises(SweepValidationError) as ei:
+        SweepGrid(networks=("vgg11-cifar",), chip_counts=(5,), node_nm=(bad,))
+    assert "node_nm" in str(ei.value)
+
+
+def test_arch_axes_default_keeps_legacy_grid_shape():
+    """Pre-ArchSpec grids are unchanged: arch axes default to DEFAULT_ARCH
+    singletons, appended after e_mac in the row-major product."""
+    grid = SweepGrid(networks=("vgg11-cifar",), chip_counts=(5,),
+                     precisions=(8,), e_mac_pj=(0.02, 0.1))
+    assert grid.shape == (1, 1, 1, 2, 1, 1, 1, 1)
+    s = grid.scenarios()[0]
+    assert (s.tiles_per_chip, s.n_c, s.n_m, s.node_nm) == (240, 256, 256, 45.0)
+    # and the as_dict/from_dict roundtrip carries the new axes
+    assert SweepGrid.from_dict(grid.as_dict()) == grid
+
+
+def test_arch_axes_multiply_scenario_count():
+    grid = SweepGrid(networks=("vgg11-cifar",), chip_counts=(5,),
+                     tiles_per_chip=(120, 240), n_c=(128, 256), n_m=(256,),
+                     node_nm=(45.0, 22.0))
+    assert grid.n_scenarios == 1 * 1 * 1 * 1 * 2 * 2 * 1 * 2
+    run = run_sweep(grid)
+    assert run.columns["n_tiles"].shape == (8,)
+    # smaller arrays need more tiles for the same layers
+    by_scenario = {(-s.n_c, s.tiles_per_chip): run.columns["n_tiles"][i]
+                   for i, s in enumerate(run.scenarios)}
+    assert by_scenario[(-128, 240)] > by_scenario[(-256, 240)]
+
+
 def test_error_message_lists_every_problem_at_once():
     with pytest.raises(SweepValidationError) as ei:
         SweepGrid(networks=("nope",), chip_counts=(0,), precisions=(3,),

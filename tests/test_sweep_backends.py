@@ -1,0 +1,183 @@
+"""Pluggable sweep backends: NumPy oracle vs JAX jitted kernel.
+
+Golden/property tests asserting column agreement across randomized grids —
+including the `ArchSpec` axes (tiles_per_chip, n_c x n_m geometry, node) —
+plus backend-registry and result-shape behaviour.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # stripped container: deterministic fallback
+    from _hypothesis_stub import given, settings, st
+
+from repro.sweep import (
+    BACKENDS,
+    COLUMNS,
+    Scenario,
+    SweepGrid,
+    build_batch,
+    register_backend,
+    run_sweep,
+)
+from repro.sweep.engine import evaluate_scenario
+
+JAX_RTOL = 1e-6  # acceptance bound; the float64 kernel lands ~1e-15
+
+
+def _rel_err(a: np.ndarray, b: np.ndarray) -> float:
+    return float(np.max(np.abs(a - b) / np.maximum(np.abs(b), 1e-300)))
+
+
+def _assert_backends_agree(grid: SweepGrid):
+    rn = run_sweep(grid, backend="numpy")
+    rj = run_sweep(grid, backend="jax")
+    assert rn.n_scenarios == rj.n_scenarios == grid.n_scenarios
+    for c in COLUMNS:
+        assert rn.columns[c].shape == rj.columns[c].shape == (grid.n_scenarios,)
+        err = _rel_err(rj.columns[c], rn.columns[c])
+        assert err < JAX_RTOL, f"column {c}: jax vs numpy rel err {err:.3e}"
+    return rn
+
+
+# ---------------------------------------------------------------------------
+# golden: numpy == scalar oracle, jax == numpy, on architecture-axis grids
+# ---------------------------------------------------------------------------
+
+
+def test_backends_agree_on_arch_axes_grid():
+    """The acceptance grid: sweeps tiles_per_chip AND n_c/n_m geometry."""
+    grid = SweepGrid(
+        networks=("vgg11-cifar", "resnet18-cifar"),
+        chip_counts=(1, 7, 24),
+        precisions=(8, 16),
+        e_mac_pj=(0.02, 0.1),
+        tiles_per_chip=(120, 240, 360),
+        n_c=(128, 256),
+        n_m=(64, 256),
+        node_nm=(45.0, 16.0),
+    )
+    rn = _assert_backends_agree(grid)
+    # numpy stays the golden oracle: spot-check a stratified scenario sample
+    # against per-scenario DominoModel.evaluate
+    idxs = range(0, grid.n_scenarios, 37)
+    scenarios = rn.scenarios
+    for i in idxs:
+        ref = evaluate_scenario(scenarios[i])
+        for c in COLUMNS:
+            assert float(rn.columns[c][i]) == pytest.approx(
+                float(ref[c]), rel=1e-9
+            ), f"column {c} diverged for {scenarios[i]}"
+
+
+@given(
+    net=st.sampled_from(["vgg11-cifar", "vgg16-imagenet", "resnet18-cifar",
+                         "llm:smollm-135m"]),
+    chips=st.integers(1, 64),
+    bits=st.sampled_from([4, 8, 16]),
+    e_mac=st.floats(0.001, 1.0),
+    tpc=st.integers(16, 512),
+    nc=st.sampled_from([32, 64, 128, 256, 384, 512]),
+    nm=st.sampled_from([32, 64, 128, 256, 384, 512]),
+    node=st.sampled_from([7.0, 16.0, 28.0, 45.0, 65.0, 90.0]),
+)
+@settings(max_examples=15, deadline=None)
+def test_randomized_scenario_agreement(net, chips, bits, e_mac, tpc, nc, nm, node):
+    """Property: for any single scenario drawn across every axis, both
+    backends match the scalar oracle."""
+    grid = SweepGrid(networks=(net,), chip_counts=(chips,), precisions=(bits,),
+                     e_mac_pj=(e_mac,), tiles_per_chip=(tpc,), n_c=(nc,),
+                     n_m=(nm,), node_nm=(node,))
+    rn = _assert_backends_agree(grid)
+    ref = evaluate_scenario(Scenario(net, chips, bits, float(e_mac), tpc, nc,
+                                     nm, node))
+    for c in COLUMNS:
+        assert float(rn.columns[c][0]) == pytest.approx(float(ref[c]), rel=1e-9)
+
+
+@given(
+    n_chips=st.integers(1, 4), n_emac=st.integers(1, 3),
+    n_tpc=st.integers(1, 3), n_geom=st.integers(1, 2),
+)
+@settings(max_examples=8, deadline=None)
+def test_randomized_grid_shapes_agree(n_chips, n_emac, n_tpc, n_geom):
+    """Property: arbitrary grid shapes keep row-major order and agreement."""
+    grid = SweepGrid(
+        networks=("vgg11-cifar",),
+        chip_counts=tuple(range(2, 2 + n_chips)),
+        precisions=(8,),
+        e_mac_pj=tuple(0.02 * (i + 1) for i in range(n_emac)),
+        tiles_per_chip=tuple(120 * (i + 1) for i in range(n_tpc)),
+        n_c=tuple(128 * (i + 1) for i in range(n_geom)),
+        n_m=tuple(64 * (i + 1) for i in range(n_geom)),
+    )
+    rn = _assert_backends_agree(grid)
+    # scenario order is the documented row-major product of AXES
+    scenarios = rn.scenarios
+    assert scenarios == grid.scenarios()
+    assert scenarios[0].n_chips == 2
+    assert scenarios[-1].n_chips == 2 + n_chips - 1
+
+
+# ---------------------------------------------------------------------------
+# backend registry + result mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_backend_raises_with_known_list():
+    grid = SweepGrid(networks=("vgg11-cifar",), chip_counts=(5,))
+    with pytest.raises(ValueError, match="unknown sweep backend"):
+        run_sweep(grid, backend="torch")
+
+
+def test_register_backend_is_pluggable():
+    grid = SweepGrid(networks=("vgg11-cifar",), chip_counts=(5, 10))
+    calls = []
+
+    def stub_backend(batch):
+        calls.append(batch.n_scenarios)
+        return BACKENDS["numpy"](batch)
+
+    register_backend("stub", stub_backend)
+    try:
+        r = run_sweep(grid, backend="stub")
+        assert calls == [2] and r.backend == "stub"
+    finally:
+        BACKENDS.pop("stub", None)
+
+
+def test_jax_backend_registers_lazily():
+    grid = SweepGrid(networks=("vgg11-cifar",), chip_counts=(5,))
+    r = run_sweep(grid, backend="jax")
+    assert "jax" in BACKENDS and r.backend == "jax"
+
+
+def test_batch_has_no_per_scenario_objects():
+    """The batch the backends consume is axis/combo arrays, not 1e5 python
+    objects: its arrays stay at axis size for a big cross-product."""
+    grid = SweepGrid(networks=("vgg11-cifar",), chip_counts=tuple(range(1, 101)),
+                     e_mac_pj=tuple(0.01 * i for i in range(1, 101)))
+    batch = build_batch(grid)
+    assert batch.n_scenarios == 10_000
+    assert batch.chips.shape == (100,) and batch.e_mac.shape == (100,)
+    assert batch.summary["n_tiles"].shape == (1, 1, 1, 1, 1)
+
+
+def test_result_rows_omitted_above_threshold():
+    small = run_sweep(SweepGrid(networks=("vgg11-cifar",), chip_counts=(5,)))
+    assert "rows" in small.as_dict()
+    big = run_sweep(SweepGrid(networks=("vgg11-cifar",),
+                              chip_counts=tuple(range(1, 102)),
+                              e_mac_pj=tuple(0.01 * i for i in range(1, 101))))
+    assert big.n_scenarios > 10_000
+    d = big.as_dict()
+    assert "rows" not in d and d["n_scenarios"] == big.n_scenarios
+    assert "rows" in big.as_dict(include_rows=True)  # explicit override wins
+
+
+def test_scenarios_are_lazy_and_cached():
+    r = run_sweep(SweepGrid(networks=("vgg11-cifar",), chip_counts=(5, 10)))
+    assert r._scenarios is None  # not materialized by the engine
+    s = r.scenarios
+    assert r.scenarios is s and len(s) == 2
