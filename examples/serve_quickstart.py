@@ -1,0 +1,42 @@
+"""Continuous-batching serving in ~30 lines (docs/serving.md).
+
+A wave of greedy requests through the slot-pool engine: one jitted decode
+step per token advances every active slot; the stats show decode cost
+scaling with max new tokens, not with the number of requests.
+
+    PYTHONPATH=src python examples/serve_quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.transformer import CallConfig, build_model
+from repro.serve import Engine, Request
+
+cfg = get_config("smollm-135m").reduced()
+model = build_model(cfg, CallConfig(remat="none"))
+params = model.init(jax.random.PRNGKey(0))
+
+engine = Engine(model, params, batch=4, max_seq=48)
+
+rng = np.random.RandomState(0)
+requests = [
+    Request(
+        prompt=rng.randint(1, cfg.vocab_size, size=6 + i % 3).astype(np.int32),
+        max_new_tokens=8,
+        temperature=0.0,  # greedy: token-identical to the sequential oracle
+    )
+    for i in range(10)
+]
+
+engine.generate(requests, seed=0)
+
+for i, r in enumerate(requests):
+    print(f"request {i}: {r.out_tokens}")
+
+s = engine.last_stats
+print(
+    f"\n{s['n_requests']} requests x 8 tokens in {s['decode_steps']} decode "
+    f"steps (occupancy {s['occupancy']:.2f} slots/step; the sequential loop "
+    f"would have paid {s['generated_tokens'] - s['prefills']} steps)"
+)

@@ -34,6 +34,11 @@ _NODE_ENERGY = {
 
 
 def node_energy_factor(node_nm: float) -> float:
+    """Relative dynamic energy per operation at ``node_nm`` (nm),
+    normalized to 1.0 at 45nm (dimensionless; Stillmaker–Baas [13] scaling
+    the paper's §IV-A bit/technology normalization uses). Linear
+    interpolation between the tabulated nodes; clamped outside the table.
+    Multiply a Tab. III 45nm energy by this (and VDD²) to move corners."""
     nodes = sorted(_NODE_ENERGY)
     if node_nm in _NODE_ENERGY:
         return _NODE_ENERGY[node_nm]

@@ -17,10 +17,12 @@ them directly, and tests assert the periods against the paper's formulas.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from functools import lru_cache
 from typing import Dict, List, Tuple
 
+from repro.core.arch import DEFAULT_ARCH, ArchSpec
 from repro.core.isa import Buf, CInstr, Dir, Func, MInstr, ScheduleTable, Sum
 from repro.core.mapping import ConvSpec, FCSpec
 
@@ -95,6 +97,13 @@ def compile_last_row_mtype(layer: ConvSpec) -> TileSchedule:
     return TileSchedule(role="conv_last", table=table, active_frac=1.0)
 
 
+def fc_rows(c_in: int, arch: ArchSpec = DEFAULT_ARCH) -> int:
+    """Systolic FC column depth: ceil(c_in / n_c) accumulate-and-forward
+    rows, each holding an ``arch.n_c``-wide MVM slice (256 in the paper's
+    geometry — previously hardcoded here)."""
+    return max(1, math.ceil(c_in / arch.n_c))
+
+
 def compile_fc_tile(layer: FCSpec, row: int, n_rows: int) -> TileSchedule:
     """FC systolic column: add own MVM slice to arriving sum, forward S."""
     last = row == n_rows - 1
@@ -111,13 +120,15 @@ def compile_fc_tile(layer: FCSpec, row: int, n_rows: int) -> TileSchedule:
 
 
 @lru_cache(maxsize=None)
-def compile_layer(layer) -> Dict[str, TileSchedule]:
+def compile_layer(layer, arch: ArchSpec = DEFAULT_ARCH) -> Dict[str, TileSchedule]:
     """All distinct tile schedules of one layer (tiles sharing a role share
     a schedule — this is what keeps NoC instruction bandwidth tiny).
 
-    Memoized on the frozen layer spec: recompiling the same layer — e.g.
-    across sweep scenarios or network replicas — returns the cached tables.
-    Callers must treat the returned dict as read-only.
+    ``arch`` sets the FC row width (``n_c``; the paper's 256 at
+    ``DEFAULT_ARCH``, bitwise-identical to the pre-``ArchSpec`` output).
+    Memoized on the frozen ``(layer, arch)`` pair: recompiling the same
+    layer — e.g. across sweep scenarios or network replicas — returns the
+    cached tables. Callers must treat the returned dict as read-only.
     """
     out: Dict[str, TileSchedule] = {}
     if isinstance(layer, ConvSpec):
@@ -126,18 +137,17 @@ def compile_layer(layer) -> Dict[str, TileSchedule]:
             out[f"k{kpos}"] = compile_conv_tile(layer, kpos, kpos == k2 - 1)
         out["mtype_last"] = compile_last_row_mtype(layer)
     else:
-        import math
-
-        n_rows = max(1, math.ceil(layer.c_in / 256))
+        n_rows = fc_rows(layer.c_in, arch)
         for r in range(n_rows):
             out[f"r{r}"] = compile_fc_tile(layer, r, n_rows)
     return out
 
 
-def steady_cycles_per_image(layers: List) -> Tuple[int, Dict[str, int]]:
+def steady_cycles_per_image(layers: List, arch: ArchSpec = DEFAULT_ARCH) -> Tuple[int, Dict[str, int]]:
     """Pipeline model (paper §IV-B2): with COM all layers stream concurrently;
     one image occupies the pipe for H_out x W_out cycles of the *bottleneck*
     (largest-output) layer, plus per-layer fill of one period each.
+    ``arch.n_c`` sets the FC column depth (``fc_rows``).
     """
     per_layer: Dict[str, int] = {}
     fill = 0
@@ -149,9 +159,7 @@ def steady_cycles_per_image(layers: List) -> Tuple[int, Dict[str, int]]:
             fill += p
             steady = max(steady, l.h_out * l.w_out)
         else:
-            import math
-
-            n_rows = max(1, math.ceil(l.c_in / 256))
+            n_rows = fc_rows(l.c_in, arch)
             per_layer[l.name] = n_rows
             fill += n_rows + 1
     return steady + fill, per_layer

@@ -21,6 +21,9 @@ def main(argv=None):
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="slot-pool size (default min(requests, 8)); the "
+                         "KV pool is preallocated at batch x max-seq")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-seq", type=int, default=128)
@@ -42,7 +45,8 @@ def main(argv=None):
                 max_new_tokens=args.max_new, temperature=args.temperature)
         for _ in range(args.requests)
     ]
-    eng = Engine(model, params, batch=args.requests, max_seq=args.max_seq)
+    batch = args.batch if args.batch is not None else min(max(args.requests, 1), 8)
+    eng = Engine(model, params, batch=batch, max_seq=args.max_seq)
     t0 = time.time()
     out = eng.generate(reqs, seed=args.seed)
     dt = time.time() - t0

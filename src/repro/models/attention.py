@@ -217,7 +217,9 @@ def flash_attention(q, k, v, *, causal: bool = True, block_kv: int = 512) -> jnp
 
 
 def decode_attention(q, k_cache, v_cache, pos: jnp.ndarray) -> jnp.ndarray:
-    """q: (B,1,H,hd); caches: (B,S,KVH,hd); pos: () current length.
+    """q: (B,1,H,hd); caches: (B,S,KVH,hd); pos: () shared current length, or
+    (B,) per-row lengths (continuous-batching slots decode at their own
+    positions).
 
     Written so reductions over the cache's S axis survive sequence sharding:
     partial max / partial sum per shard + cross-shard combine == flash
@@ -230,7 +232,8 @@ def decode_attention(q, k_cache, v_cache, pos: jnp.ndarray) -> jnp.ndarray:
     kf = k_cache.astype(jnp.float32)
     vf = v_cache.astype(jnp.float32)
     s = jnp.einsum("bkgh,bskh->bkgs", qg, kf)
-    valid = jnp.arange(S)[None, :] <= pos  # (1, S) positions filled so far
+    # (1,S) or (B,S) mask of positions filled so far
+    valid = jnp.arange(S)[None, :] <= jnp.reshape(pos, (-1, 1))
     s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
     m = jnp.max(s, axis=-1, keepdims=True)          # partial-max -> all-reduce
     p = jnp.exp(s - jax.lax.stop_gradient(m))
@@ -294,6 +297,10 @@ def attention_block(
         a cache should be *filled* (prefill), pass kv_cache=(k0, v0) zeros
         with cache_pos=None -> returns updated cache.
       - decode (kv_cache given + cache_pos given): one-token step.
+        ``cache_pos`` is a () scalar shared by every row, or a (B,) vector
+        of per-row positions (continuous-batching slots). Per-row writes
+        land at each row's own position; rows whose position is >= the
+        cache length write nothing (the safe parking state for idle slots).
     """
     B, S, d = x.shape
     q, k, v = qkv_project(params, x, num_heads, num_kv_heads)
@@ -304,8 +311,20 @@ def attention_block(
     if kv_cache is not None and cache_pos is not None:
         # decode: append this step's k/v at cache_pos
         k_cache, v_cache = kv_cache
-        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), cache_pos, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), cache_pos, axis=1)
+        if jnp.ndim(cache_pos) == 0:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), cache_pos, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), cache_pos, axis=1)
+        else:
+            # per-row scatter: row b writes its one new k/v at cache_pos[b];
+            # mode="drop" makes a row parked at pos >= S a no-op, and the
+            # write traffic is O(B) rows, not a full-cache select
+            rows = jnp.arange(k_cache.shape[0])
+            k_cache = k_cache.at[rows, cache_pos].set(
+                k[:, 0].astype(k_cache.dtype), mode="drop"
+            )
+            v_cache = v_cache.at[rows, cache_pos].set(
+                v[:, 0].astype(v_cache.dtype), mode="drop"
+            )
         out = decode_attention(q, k_cache, v_cache, cache_pos)
         new_cache = (k_cache, v_cache)
     else:

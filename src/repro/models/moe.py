@@ -79,15 +79,30 @@ def _dispatch_group(x, logits, top_k: int, capacity: int, num_experts: int):
     return buf, slot.reshape(T, top_k), gates.astype(x.dtype), gates_full
 
 
+def expert_capacity(n_tokens: int, *, top_k: int, num_experts: int,
+                    capacity_factor: float, dp_size: int = 1) -> Tuple[int, int, int]:
+    """The (dp groups, tokens per group, per-expert buffer depth) that
+    ``moe_forward`` uses for a batch of ``n_tokens``. Tokens whose
+    per-expert rank reaches the capacity are dropped, so
+    ``capacity >= tokens_per_group`` means no drop is possible — the exact
+    drop-free check the serve engine's MoE guard evaluates. Keep this the
+    single source of the capacity formula: the guard is only sound while
+    it computes byte-for-byte what the dispatch does."""
+    dp = max(1, min(dp_size, n_tokens))
+    while n_tokens % dp:
+        dp //= 2
+    tl = n_tokens // dp
+    return dp, tl, max(1, int((tl * top_k / num_experts) * capacity_factor))
+
+
 def moe_forward(params: Params, x: jnp.ndarray, *, top_k: int, num_experts: int, capacity_factor: float, dp_size: int, shard_fn=None, ep_split: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: (B,S,D) -> (y (B,S,D), aux_loss scalar)."""
     B, S, D = x.shape
     T = B * S
-    dp = max(1, min(dp_size, T))
-    while T % dp:
-        dp //= 2
-    Tl = T // dp
-    capacity = max(1, int((Tl * top_k / num_experts) * capacity_factor))
+    dp, Tl, capacity = expert_capacity(
+        T, top_k=top_k, num_experts=num_experts,
+        capacity_factor=capacity_factor, dp_size=dp_size,
+    )
     xg = x.reshape(dp, Tl, D)
     # pin the dispatch to its batch shard so the vmap'd scatter/gather stays
     # device-local (GSPMD otherwise replicates the (dp,Tl,D) scatter buffers)

@@ -125,11 +125,12 @@ def _self_block_seq(p, x, cfg, cc, positions, cache):
 
 
 def _self_block_step(p, x, cfg, cc, pos, cache):
-    """One-token decode step against KV cache."""
+    """One-token decode step against KV cache. ``pos`` is a () scalar shared
+    by the whole batch or a (B,) vector of per-row positions (slot serving)."""
     _, norm = make_norm(cfg.norm)
     B = x.shape[0]
     h = norm(p["ln1"], x)
-    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    positions = jnp.broadcast_to(jnp.reshape(pos, (-1, 1)), (B, 1))
     y, new_cache = attn_lib.attention_block(
         p["attn"], h, positions, cfg.num_heads, cfg.num_kv_heads,
         rope_theta=cfg.rope_theta, rope_fraction=cfg.rope_fraction,
@@ -488,7 +489,14 @@ class Model:
 
     # -------------------- decode --------------------
     def decode_step(self, p: Params, token: jnp.ndarray, cache: PyTree, pos: jnp.ndarray):
-        """One-token step. token: (B,1) (or (B,1,K) audio); pos: scalar int32.
+        """One-token step. token: (B,1) (or (B,1,K) audio).
+
+        ``pos`` is either a () scalar int32 (all rows decode at the same
+        position — the lockstep/batch-inference case) or a (B,) int32 vector
+        of per-row positions (the continuous-batching serve engine: each
+        cache slot is at its own sequence offset; a row parked at
+        ``pos >= max_seq`` attends but writes nothing, the safe state for
+        idle slots). Per-row results are identical between the two forms.
 
         Returns (logits (B,1,V...), new_cache).
         """

@@ -1,1 +1,17 @@
-"""serve subpackage."""
+"""Continuous-batching LLM serving (docs/serving.md).
+
+``Engine`` serves request waves through a fixed pool of decode slots —
+one jitted ``decode_step`` per token advances every active slot —
+backed by ``SlotCache``, the slot-indexed preallocated KV cache.
+"""
+from repro.serve.engine import Engine, Request
+from repro.serve.kvcache import SlotCache, cache_bytes, init_slots, trim_report
+
+__all__ = [
+    "Engine",
+    "Request",
+    "SlotCache",
+    "cache_bytes",
+    "init_slots",
+    "trim_report",
+]

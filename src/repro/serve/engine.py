@@ -1,20 +1,49 @@
-"""Serving engine: batched prefill + decode loop over the model facade.
+"""Continuous-batching serving engine: one jitted decode step per token.
 
-Continuous-batching-lite: a fixed decode batch; finished sequences (EOS or
-length) are retired and their slots refilled from the pending queue between
-decode steps (slot refill = prefill of the new prompt into the slot's cache
-rows — here done per-slot for clarity). Deterministic greedy / temperature
-sampling.
+A fixed pool of ``batch`` decode *slots* backed by one preallocated shared
+KV cache (:class:`repro.serve.kvcache.SlotCache`). Every generated token
+costs exactly one jitted ``model.decode_step`` call that advances **all**
+active slots at once — per-slot sequence offsets ride in a ``(batch,)``
+position vector, idle slots are parked at ``pos = max_seq`` (their KV
+writes are masked out and their sampled outputs discarded; recurrent
+SSM/hybrid state may still advance on parked rows, but admission's
+``write_prefill`` fully overwrites a slot before reuse, so nothing a
+parked row computes ever reaches a request), and sampling is vectorized
+over the pool with per-slot fold-in keys. Finished sequences (EOS or length) retire between steps and
+their slots are refilled from the pending queue: refill = prefill of the
+incoming prompt into the freed slot's cache rows.
+
+Determinism contract (asserted by tests/test_serve.py):
+
+* greedy (``temperature=0``) outputs are token-identical to
+  :meth:`Engine.generate_sequential`, the retained per-request oracle loop;
+* temperature sampling replays the oracle's exact key chain — slot key
+  ``key = fold_in(PRNGKey(seed), request_index)`` at prefill, then the
+  *chained* fold ``key = fold_in(key, t)`` at each local decode step ``t``
+  (so step 1 samples with ``fold_in(fold_in(key, 0), 1)``, not
+  ``fold_in(key, 1)``) — sampled outputs are seed-deterministic and
+  independent of slot assignment/batch layout.
+
+Families with ``(B, 1)`` decode tokens are supported (dense / hybrid /
+ssm; moe only with expert capacity that is drop-free at the pool size —
+capacity-based token dropping routes per batch composition, breaking the
+identity. ``generate`` evaluates ``moe_forward``'s exact capacity formula
+and its error suggests a sufficient ``capacity_factor``; see
+docs/serving.md). Not servable here: multi-codebook audio needs ``(B, 1, K)`` token feedback
+(``generate`` rejects it — use the oracle loop), and vlm prefill needs
+``image_embeds`` that :class:`Request` does not carry.
 """
 from __future__ import annotations
 
-import dataclasses
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.kvcache import init_slots
 
 PyTree = Any
 
@@ -28,8 +57,28 @@ class Request:
     done: bool = False
 
 
+@dataclass
+class _SlotState:
+    """Host-side bookkeeping for one occupied slot."""
+
+    req: Request
+    produced: int  # tokens emitted so far (incl. the prefill-sampled one)
+
+
 class Engine:
+    """Continuous-batching engine over the model facade.
+
+    ``batch`` is the slot-pool size (decode batch), ``max_seq`` the shared
+    per-slot cache capacity (prompt + generated tokens must fit). After
+    :meth:`generate`, ``last_stats`` holds the throughput counters the
+    serve benchmark publishes (decode steps, generated tokens, occupancy).
+    """
+
     def __init__(self, model, params, *, batch: int, max_seq: int, eos_id: Optional[int] = None):
+        if batch < 1:
+            raise ValueError(f"batch (slot-pool size) must be >= 1, got {batch}")
+        if max_seq < 1:
+            raise ValueError(f"max_seq must be >= 1, got {max_seq}")
         self.model = model
         self.params = params
         self.batch = batch
@@ -37,8 +86,47 @@ class Engine:
         self.eos_id = eos_id
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill)
+        self._step = jax.jit(
+            self._step_impl, donate_argnums=(1,), static_argnums=(7,)
+        )
+        # one pool for the engine's lifetime: waves reuse the allocation and
+        # the jitted slot writers (write_prefill fully overwrites a slot's
+        # rows at admission, so no bytes survive between waves). Allocated
+        # lazily on the first generate() so engines used only through the
+        # oracle loop (e.g. audio) never pay for a pool
+        self._slots = None
+        self.last_stats: Dict[str, Any] = {}
 
+    @property
+    def slots(self):
+        """The engine's slot pool (allocated on first use)."""
+        if self._slots is None:
+            self._slots = init_slots(self.model, self.batch, self.max_seq)
+        return self._slots
+
+    def _validate(self, requests: List[Request]) -> None:
+        """Reject requests that cannot fit the slot cache up front: an
+        overflowing slot would silently drop KV writes at ``pos >= max_seq``
+        (the masked scatter) while the scalar oracle clamps them, breaking
+        the token-identity contract with a confusing divergence instead of
+        a clear capacity error."""
+        for ri, req in enumerate(requests):
+            if len(req.prompt) == 0:
+                raise ValueError(
+                    f"request {ri} has an empty prompt; prefill needs at "
+                    "least one token"
+                )
+            need = len(req.prompt) + req.max_new_tokens
+            if need > self.max_seq:
+                raise ValueError(
+                    f"request {ri} needs {need} cache rows "
+                    f"(prompt {len(req.prompt)} + max_new_tokens "
+                    f"{req.max_new_tokens}) but max_seq={self.max_seq}"
+                )
+
+    # -------------------- sampling --------------------
     def _sample(self, logits: jnp.ndarray, temperature: float, key) -> int:
+        """Host-side single-request sampling (prefill + oracle loop)."""
         logits = logits[0, -1]
         if logits.ndim > 1:  # audio multi-codebook: take codebook 0
             logits = logits[0]
@@ -46,8 +134,181 @@ class Engine:
             return int(jnp.argmax(logits))
         return int(jax.random.categorical(key, logits / temperature))
 
+    def _step_impl(self, params, cache, tok, pos, keys, steps, temps, do_sample):
+        """One jitted decode step for the whole slot pool.
+
+        tok/pos/steps: (B,) int32; keys: stacked per-slot PRNG keys;
+        temps: (B,) float32 (0 = greedy); do_sample: static bool — False
+        for all-greedy waves, compiling out the per-step key fold and the
+        discarded categorical (keys are unused when nothing samples).
+        Returns (next tok, cache, keys).
+        """
+        logits, cache = self.model.decode_step(params, tok[:, None], cache, pos)
+        logits = logits[:, 0]
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if not do_sample:
+            return greedy, cache, keys
+        keys = jax.vmap(jax.random.fold_in)(keys, steps)
+        # guard the categorical branch against temp=0 rows (greedy rows
+        # select the argmax anyway); divide in the logits dtype so sampled
+        # rows bit-match the oracle's `logits / temperature`
+        safe = jnp.where(temps > 0, temps, 1.0).astype(logits.dtype)
+        sampled = jax.vmap(jax.random.categorical)(
+            keys, logits / safe[:, None]
+        ).astype(jnp.int32)
+        tok = jnp.where(temps > 0, sampled, greedy)
+        return tok, cache, keys
+
+    # -------------------- continuous batching --------------------
     def generate(self, requests: List[Request], *, seed: int = 0) -> List[Request]:
-        """Simple slot-batched generation (per-request caches)."""
+        """Serve ``requests`` through the slot pool; one jitted decode step
+        per token across all active slots. Mutates and returns ``requests``
+        (tokens in ``out_tokens``); fills ``self.last_stats``."""
+        if not requests:
+            self.last_stats = dict(
+                decode_steps=0, generated_tokens=0, prefills=0,
+                occupancy=0.0, admission_order=[], batch=self.batch,
+                n_requests=0,
+            )
+            return requests
+        cfg = getattr(self.model, "cfg", None)
+        if getattr(cfg, "num_codebooks", 0):
+            raise ValueError(
+                "multi-codebook audio decoding needs (B, 1, K) token "
+                "feedback the slot pool does not carry; serve audio "
+                "configs through generate_sequential"
+            )
+        if getattr(cfg, "family", None) == "vlm":
+            raise ValueError(
+                "vlm prefill needs image_embeds, which Request does not "
+                "carry yet; the serve engine cannot serve vlm configs"
+            )
+        moe = getattr(cfg, "moe", None)
+        if moe is not None:
+            # exact drop-free check at this pool size: moe_forward's own
+            # capacity formula (shared helper, so the two can't drift)
+            # must cover the worst case of every decode row in a dp group
+            # routing to one expert (the batch-1 oracle never drops at
+            # decode, so any drop here silently diverges from it)
+            from repro.models.moe import expert_capacity
+
+            _, tl, cap = expert_capacity(
+                self.batch, top_k=moe.top_k, num_experts=moe.num_experts,
+                capacity_factor=moe.capacity_factor,
+                dp_size=getattr(getattr(self.model, "cc", None), "dp_size", 1),
+            )
+            if cap < tl:
+                # one full token of headroom makes the suggestion immune
+                # to the formula's float truncation
+                ok_cf = (tl + 1) * moe.num_experts / (tl * moe.top_k)
+                raise ValueError(
+                    f"moe expert capacity {cap} < {tl} decode rows per "
+                    "dispatch group: capacity-based token dropping routes "
+                    "per batch composition, so batched outputs would "
+                    "silently diverge from the sequential oracle; use a "
+                    f"drop-free capacity_factor (>= {ok_cf:.4g} for this "
+                    "pool — see docs/serving.md)"
+                )
+        self._validate(requests)
+        B = self.batch
+        base_key = jax.random.PRNGKey(seed)
+        do_sample = any(float(r.temperature) > 0 for r in requests)
+        slots = self.slots
+        pending = deque(enumerate(requests))
+        state: List[Optional[_SlotState]] = [None] * B
+
+        tok = jnp.zeros((B,), jnp.int32)
+        pos = jnp.full((B,), self.max_seq, jnp.int32)  # parked: no writes
+        keys = jnp.stack([base_key] * B)
+        steps = jnp.zeros((B,), jnp.int32)
+        temps = jnp.zeros((B,), jnp.float32)
+        stats: Dict[str, Any] = dict(
+            decode_steps=0, generated_tokens=0, prefills=0,
+            occupancy_sum=0, admission_order=[], batch=B,
+            n_requests=len(requests),
+        )
+
+        def admit(b: int) -> None:
+            """Refill slot ``b`` from the pending queue (prefill into the
+            freed slot's cache rows). Requests finishing at prefill (EOS or
+            max_new_tokens<=1) complete without ever occupying the slot."""
+            nonlocal tok, pos, keys, steps, temps
+            while pending:
+                ri, req = pending.popleft()
+                stats["admission_order"].append(ri)
+                prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                # the pristine template is immutable (non-donating jit), so
+                # admission reuses it instead of allocating a fresh cache
+                logits, one = self._prefill(self.params, prompt, slots.template)
+                stats["prefills"] += 1
+                key_r = jax.random.fold_in(base_key, ri)
+                t0 = self._sample(logits, req.temperature, key_r)
+                req.out_tokens.append(t0)
+                stats["generated_tokens"] += 1
+                if req.max_new_tokens <= 1 or (
+                    self.eos_id is not None and t0 == self.eos_id
+                ):
+                    req.done = True
+                    continue
+                slots.write_prefill(b, one)
+                state[b] = _SlotState(req=req, produced=1)
+                tok = tok.at[b].set(t0)
+                pos = pos.at[b].set(prompt.shape[1])
+                keys = keys.at[b].set(key_r)
+                steps = steps.at[b].set(0)
+                temps = temps.at[b].set(float(req.temperature))
+                return
+
+        while True:
+            for b in range(B):
+                if state[b] is None and pending:
+                    admit(b)
+            n_active = sum(1 for s in state if s is not None)
+            if n_active == 0:
+                break
+            tok, slots.cache, keys = self._step(
+                self.params, slots.cache, tok, pos, keys, steps, temps,
+                do_sample,
+            )
+            stats["decode_steps"] += 1
+            stats["occupancy_sum"] += n_active
+            steps = steps + 1
+            pos = pos + 1
+            toks_np = np.asarray(jax.device_get(tok))
+            for b in range(B):
+                st = state[b]
+                if st is None:
+                    continue
+                t = int(toks_np[b])
+                st.req.out_tokens.append(t)
+                st.produced += 1
+                stats["generated_tokens"] += 1
+                if st.produced >= st.req.max_new_tokens or (
+                    self.eos_id is not None and t == self.eos_id
+                ):
+                    st.req.done = True
+                    state[b] = None
+                    # no reset needed: admission's write_prefill fully
+                    # overwrites the slot before reuse, and a parked row's
+                    # KV writes are dropped / outputs discarded
+                    pos = pos.at[b].set(self.max_seq)  # park
+                    temps = temps.at[b].set(0.0)
+
+        stats["occupancy"] = (
+            stats["occupancy_sum"] / stats["decode_steps"]
+            if stats["decode_steps"] else 0.0
+        )
+        del stats["occupancy_sum"]
+        self.last_stats = stats
+        return requests
+
+    # -------------------- per-request oracle --------------------
+    def generate_sequential(self, requests: List[Request], *, seed: int = 0) -> List[Request]:
+        """The pre-batching per-request loop, retained verbatim as the
+        determinism oracle: one cache and one python decode loop per
+        request. Greedy outputs of :meth:`generate` are asserted
+        token-identical to this path by the golden tests."""
+        self._validate(requests)
         key = jax.random.PRNGKey(seed)
         for ri, req in enumerate(requests):
             cache = self.model.init_cache(1, self.max_seq)

@@ -1,4 +1,26 @@
-"""KV cache utilities for the serving engine."""
+"""Slot-indexed KV cache for the continuous-batching serve engine.
+
+One preallocated cache pytree (``model.init_cache(batch, max_seq)``) backs a
+fixed pool of ``batch`` decode *slots*; the serve engine advances every slot
+with a single jitted ``decode_step`` per token. :class:`SlotCache` owns the
+pytree plus the per-leaf batch-axis map (cache layouts stack group/layer axes
+*in front of* the batch axis, and the batch axis depth differs per family —
+dense KV leaves are ``(L, B, S, KVH, hd)``, VLM self-attn leaves
+``(NG, ce-1, B, S, KVH, hd)``, SSM state leaves ``(NG, B, ...)`` — so the
+axis is discovered structurally, by diffing ``init_cache(1)`` vs
+``init_cache(2)`` shapes under ``jax.eval_shape``).
+
+Slot lifecycle (all jitted, donated, in-place on the shared pytree):
+
+* :func:`init_slots`               — allocate the pool (a :class:`SlotCache`).
+* :meth:`SlotCache.write_prefill`  — copy a freshly prefilled single-request
+  cache (``init_cache(1, max_seq)`` shape) into one slot's rows.
+* :meth:`SlotCache.reset_slot`     — explicitly scrub a slot back to the
+  initial (zero-state) template (not needed on the serve hot path:
+  ``write_prefill`` fully overwrites a slot at admission).
+* :meth:`SlotCache.read_slot`      — extract one slot as a batch-1 pytree
+  (test/introspection path; not used on the serving hot path).
+"""
 from __future__ import annotations
 
 from typing import Any, Dict
@@ -10,12 +32,107 @@ PyTree = Any
 
 
 def cache_bytes(cache: PyTree) -> int:
+    """Total bytes held by a cache pytree (sum over leaves of size x
+    itemsize) — the number the KV-cache capacity planning in
+    docs/serving.md budgets against."""
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
 
 
 def trim_report(cache: PyTree) -> Dict[str, float]:
+    """Human-readable cache footprint: leaf count + total GB."""
     leaves = jax.tree.leaves(cache)
     return {
         "n_leaves": len(leaves),
         "total_gb": cache_bytes(cache) / 1e9,
     }
+
+
+def batch_axes(model, max_seq: int) -> PyTree:
+    """Per-leaf batch-axis index of ``model.init_cache``'s pytree.
+
+    Discovered structurally (no allocation): the one axis whose length
+    changes between ``init_cache(1, max_seq)`` and ``init_cache(2, max_seq)``
+    is the batch/slot axis. A leaf with no such axis is batch-independent
+    and mapped to ``None`` (shared between slots, never slot-written).
+    """
+    s1 = jax.eval_shape(lambda: model.init_cache(1, max_seq))
+    s2 = jax.eval_shape(lambda: model.init_cache(2, max_seq))
+
+    def axis(a, b):
+        cands = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if not cands:
+            return None
+        if len(cands) > 1:
+            raise ValueError(
+                f"ambiguous batch axis for cache leaf {a.shape} vs {b.shape}"
+            )
+        return cands[0]
+
+    return jax.tree.map(axis, s1, s2)
+
+
+class SlotCache:
+    """A fixed pool of ``batch`` decode slots over one shared cache pytree.
+
+    ``cache`` is the live pytree handed to the jitted decode step (and
+    donated back — assign the returned pytree to ``cache`` after each step).
+    Slot writes are jitted with donation, so steady-state serving never
+    copies the pool.
+    """
+
+    def __init__(self, model, batch: int, max_seq: int):
+        self.batch = batch
+        self.max_seq = max_seq
+        self.axes = batch_axes(model, max_seq)
+        self.cache = model.init_cache(batch, max_seq)
+        # the pristine single-slot state reset_slot restores (KV zeros /
+        # initial SSM state); also the batch-1 layout write_prefill inputs
+        # match, and the engine reuses it as the (immutable) prefill input
+        # so admission never re-allocates a fresh init_cache(1)
+        self.template = model.init_cache(1, max_seq)
+
+        def write(cache, one, slot):
+            def upd(full, new, ax):
+                if ax is None:
+                    return full
+                return jax.lax.dynamic_update_slice_in_dim(
+                    full, new.astype(full.dtype), slot, axis=ax
+                )
+
+            return jax.tree.map(upd, cache, one, self.axes)
+
+        def read(cache, slot):
+            def take(full, ax):
+                if ax is None:
+                    return full
+                return jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=ax)
+
+            return jax.tree.map(take, cache, self.axes)
+
+        self._write = jax.jit(write, donate_argnums=0)
+        self._read = jax.jit(read)
+
+    def write_prefill(self, slot, one_cache: PyTree) -> None:
+        """Install a prefilled batch-1 cache (``init_cache(1, max_seq)``
+        layout) into ``slot``'s rows of the shared pool."""
+        self.cache = self._write(self.cache, one_cache, jnp.int32(slot))
+
+    def reset_slot(self, slot) -> None:
+        """Explicitly scrub ``slot`` back to the initial cache state (KV
+        zeros, fresh SSM state).
+
+        Not required for slot isolation on the serve hot path —
+        :meth:`write_prefill` fully overwrites a slot's rows at admission,
+        which is what keeps successors clean — but useful to drop a retired
+        request's bytes from the pool eagerly (and for tests)."""
+        self.cache = self._write(self.cache, self.template, jnp.int32(slot))
+
+    def read_slot(self, slot) -> PyTree:
+        """Extract ``slot`` as a batch-1 cache pytree (tests/introspection)."""
+        return self._read(self.cache, jnp.int32(slot))
+
+
+def init_slots(model, batch: int, max_seq: int) -> SlotCache:
+    """Allocate the serve engine's slot pool: one shared
+    ``model.init_cache(batch, max_seq)`` pytree plus its slot-axis map."""
+    return SlotCache(model, batch, max_seq)

@@ -23,6 +23,8 @@ LLM_PREFIX = "llm:"
 
 @lru_cache(maxsize=None)
 def available_networks() -> Tuple[str, ...]:
+    """Every name a ``SweepGrid.networks`` axis may use: the paper's four
+    Tab. IV CNNs plus one ``llm:<arch-id>`` bridge per seed config."""
     return tuple(NETWORKS) + tuple(f"{LLM_PREFIX}{a}" for a in ARCHS)
 
 

@@ -67,6 +67,8 @@ class Scenario:
         )
 
     def as_dict(self) -> Dict:
+        """All eight scenario parameters as a plain dict (the per-row
+        params half of ``SweepResult.rows()``)."""
         return asdict(self)
 
 
@@ -231,6 +233,8 @@ class SweepGrid:
         ]
 
     def as_dict(self) -> Dict:
+        """JSON-ready axes dict (``from_dict``'s inverse; the ``grid`` key
+        of the sweep benchmark artifact)."""
         return dict(
             networks=list(self.networks),
             chip_counts=list(self.chip_counts),

@@ -1,0 +1,112 @@
+"""Markdown link checker for the docs tree (the CI docs leg).
+
+Dependency-free: walks the given markdown files/directories, extracts
+``[text](target)`` links and bare image refs, and verifies that
+
+* relative file targets exist on disk (relative to the containing file);
+* ``#anchor`` fragments — same-file or ``path#anchor`` — match a heading's
+  GitHub-style slug in the target file.
+
+External links (``http(s)://``, ``mailto:``) and repo-relative GitHub UI
+paths that escape the repo root (e.g. the CI badge's ``../../actions/...``)
+are skipped — this is a structural check, not a crawler.
+
+    python tools/check_docs.py README.md docs
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Iterable, List
+
+# target is either <angle-bracketed> (may contain spaces) or space-free,
+# optionally followed by a "title"/'title' — titled links must still be
+# checked, not silently skipped
+LINK_RE = re.compile(
+    r"""!?\[[^\]]*\]\(\s*(<[^>]*>|[^)\s]+)(?:\s+["'][^"']*["'])?\s*\)"""
+)
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading slug: lowercase, drop punctuation (incl.
+    backticks and em dashes), spaces -> hyphens."""
+    h = heading.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    text = CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    slugs = set()
+    counts = {}
+    for m in HEADING_RE.finditer(text):
+        s = slugify(m.group(1))
+        n = counts.get(s, 0)
+        counts[s] = n + 1
+        slugs.add(s if n == 0 else f"{s}-{n}")  # GitHub dedup suffixing
+    return slugs
+
+
+def md_files(args: Iterable[str]) -> List[Path]:
+    out: List[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.md")))
+        else:
+            out.append(p)
+    return out
+
+
+def check_file(path: Path, repo_root: Path) -> List[str]:
+    problems: List[str] = []
+    text = CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith("<"):
+            target = target[1:-1]
+        if not target or target.startswith(("http://", "https://", "mailto:")):
+            continue
+        file_part, _, anchor = target.partition("#")
+        if file_part:
+            dest = (path.parent / file_part).resolve()
+            try:
+                dest.relative_to(repo_root)
+            except ValueError:
+                continue  # escapes the repo (GitHub UI path like the badge)
+            if not dest.exists():
+                problems.append(f"{path}: broken link -> {target}")
+                continue
+            anchor_file = dest
+        else:
+            anchor_file = path
+        if anchor and anchor_file.suffix == ".md":
+            if anchor not in anchors_of(anchor_file):
+                problems.append(
+                    f"{path}: missing anchor #{anchor} in {anchor_file.name}"
+                )
+    return problems
+
+
+def main(argv: List[str]) -> int:
+    targets = argv or ["README.md", "docs"]
+    repo_root = Path.cwd().resolve()
+    files = md_files(targets)
+    if not files:
+        print("check_docs: no markdown files found", file=sys.stderr)
+        return 1
+    problems: List[str] = []
+    for f in files:
+        problems.extend(check_file(f, repo_root))
+    for p in problems:
+        print(p, file=sys.stderr)
+    print(f"check_docs: {len(files)} files, {len(problems)} problems",
+          file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
