@@ -13,6 +13,7 @@ from typing import Dict, List
 
 from repro.core import energy as E
 from repro.core.mapping import NETWORKS
+from repro.core.program import compile_program
 from repro.core.simulator import DominoModel
 
 
@@ -26,8 +27,8 @@ def implied_e_mac_pj(key: str) -> float:
 def run() -> List[Dict]:
     rows = []
     for key, cp in E.COUNTERPARTS.items():
-        net = NETWORKS[cp.model]()
-        model = DominoModel(net)
+        # one compiled program per Tab. IV workload (cached across rows)
+        model = DominoModel(compile_program(NETWORKS[cp.model]()))
         e_mac = implied_e_mac_pj(key)
         paper = E.PAPER_DOMINO[key]
         # pin the evaluation setup (chips, active area) to the paper's —

@@ -1,19 +1,33 @@
-"""Paper-reproduction example: run the Domino NoC simulator end to end.
+"""Paper-reproduction example: Workload -> CompiledProgram -> Tab. IV.
 
     PYTHONPATH=src python examples/domino_tableiv.py
 
-Maps VGG-11 onto Domino tiles, compiles the periodic instruction schedules
-(p = 2(P+W)), executes one small conv layer cycle-by-cycle through the COM
-dataflow (validating it computes a REAL convolution), then evaluates the
-full network against the paper's Tab. IV counterparts.
+Compiles VGG-11 through the single `compile_program` entry point (tile
+placement, block partition, periodic instruction schedules, closed-form
+event counts — all from one call), executes a conv layer's block chain
+cycle-accurately through the COM dataflow (validating it computes a REAL
+convolution, including a C>N_C multi-block chain), then evaluates the full
+network against the paper's Tab. IV counterparts.
 """
 import numpy as np
 
-from repro.core.mapping import ConvSpec, map_network, tiles_for, vgg11_cifar
-from repro.core.schedule import compile_layer, conv_period
+from repro.core.arch import DEFAULT_ARCH
+from repro.core.mapping import ConvSpec, vgg11_cifar
+from repro.core.program import Workload, compile_program
+from repro.core.schedule import conv_period
 from repro.core.simulator import COMGridSim, DominoModel, reference_conv
 
-# --- 1. a real conv through the COM instruction dataflow ---
+# --- 1. compile the workload: one entry point for mapping/schedule/events ---
+workload = vgg11_cifar()
+program = compile_program(workload)
+print(f"{workload.name}: {len(workload)} layers -> {program.n_tiles} tiles "
+      f"on {program.n_chips} chip(s) minimum")
+lp = program.layer_programs[0]
+print(f"  {lp.layer.name}: {lp.c_blocks}x{lp.m_blocks} block grid, "
+      f"{len(lp.schedules)} shared schedules (K²+1), period p=2(P+W)="
+      f"{conv_period(lp.layer)}")
+
+# --- 2. a real conv through the COM instruction dataflow ---
 layer = ConvSpec("demo", 3, 8, 16, 10, 10)
 rng = np.random.default_rng(0)
 w = rng.normal(size=(3, 3, 8, 16))
@@ -24,16 +38,22 @@ assert np.allclose(y, reference_conv(x, w, layer), atol=1e-10)
 print(f"COM dataflow == conv (exact); events: ps_hops={sim.ev.ps_hops} "
       f"buf_push={sim.ev.buf_push} act={sim.ev.act}")
 
-# --- 2. periodic schedules ---
-scheds = compile_layer(layer)
-print(f"schedules per layer: {len(scheds)} (K²+1 — tiles share by role), "
-      f"period p=2(P+W)={conv_period(layer)}")
+# --- 3. a multi-block chain (C>N_C, M>N_M): partial sums accumulate across
+#        chained C-blocks, outputs concatenate across M-blocks ---
+small = DEFAULT_ARCH.replace(n_c=4, n_m=8)
+mb_layer = ConvSpec("mb", 3, 10, 16, 8, 8)
+mb_prog = compile_program(Workload("mb-demo", (mb_layer,)), small)
+mb_lp = mb_prog.layer_programs[0]
+wm = rng.normal(size=(3, 3, 10, 16))
+xm = rng.normal(size=(8, 8, 10))
+mb_sim = COMGridSim.from_program(mb_prog, "mb", wm)
+assert np.allclose(mb_sim.run(xm), reference_conv(xm, wm, mb_layer), atol=1e-10)
+print(f"multi-block chain == conv (exact): {mb_lp.c_blocks} C-blocks x "
+      f"{mb_lp.m_blocks} M-blocks at n_c={small.n_c}, n_m={small.n_m}")
 
-# --- 3. map VGG-11 and evaluate vs the paper ---
-net = vgg11_cifar()
-model = DominoModel(net)
-print(f"VGG-11: {model.n_tiles} tiles, {model.n_chips} chip(s) minimum; "
-      f"exec latency {model.exec_time_us():.1f} us")
+# --- 4. the model consumes the program: evaluate vs the paper ---
+model = DominoModel(program)
+print(f"VGG-11: exec latency {model.exec_time_us():.1f} us")
 
 import os
 import sys

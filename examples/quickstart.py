@@ -2,9 +2,10 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a reduced llama-family model, takes two training steps, then serves
-a few tokens from the trained weights — the same Model/OptConfig/Engine
-objects the production launchers use.
+Builds a reduced llama-family model, takes two training steps, serves a
+few tokens from the trained weights — the same Model/OptConfig/Engine
+objects the production launchers use — then compiles and evaluates a
+Domino NoC workload through the `Workload -> compile_program` IR.
 """
 import jax
 import jax.numpy as jnp
@@ -39,3 +40,13 @@ eng = Engine(model, state["params"], batch=2, max_seq=64)
 reqs = [Request(prompt=np.arange(1, 9, dtype=np.int32), max_new_tokens=8)]
 out = eng.generate(reqs)
 print("generated:", out[0].out_tokens)
+
+# 5. the Domino core in three lines: compile a Workload, evaluate Tab. IV
+from repro.core.mapping import vgg11_cifar
+from repro.core.program import compile_program
+from repro.core.simulator import DominoModel
+
+program = compile_program(vgg11_cifar())  # mapping + schedules + events, cached
+res = DominoModel(program).evaluate(0.05, n_chips=5)
+print(f"domino: {program.n_tiles} tiles on {program.n_chips} chip(s), "
+      f"CE={res['ce_tops_w']:.2f} TOPS/W")

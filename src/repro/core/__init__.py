@@ -2,5 +2,21 @@
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
 from repro.core.arch import DEFAULT_ARCH, ArchSpec, EnergyTable
+from repro.core.program import (
+    CompiledProgram,
+    LayerBlock,
+    LayerProgram,
+    Workload,
+    compile_program,
+)
 
-__all__ = ["ArchSpec", "DEFAULT_ARCH", "EnergyTable"]
+__all__ = [
+    "ArchSpec",
+    "CompiledProgram",
+    "DEFAULT_ARCH",
+    "EnergyTable",
+    "LayerBlock",
+    "LayerProgram",
+    "Workload",
+    "compile_program",
+]

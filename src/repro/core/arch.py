@@ -136,6 +136,18 @@ class ArchSpec:
             raise ValueError("invalid ArchSpec:\n" + "\n".join(problems))
 
     # ---- derived quantities ----
+    def block_partition(self, c_in: int, c_out: int) -> "tuple[int, int]":
+        """A layer's CIM block grid: ``(ceil(c_in/n_c), ceil(c_out/n_m))``.
+
+        The single source of the C/M block-partition arithmetic — the
+        mapping (``tiles_for``), the Workload→CompiledProgram compiler
+        (``repro.core.program``), and the event closed forms all agree on
+        this grid. A layer with ``c_in > n_c`` needs a chain of
+        ``c_blocks`` accumulating block groups; ``c_out > n_m`` needs
+        ``m_blocks`` parallel output slices.
+        """
+        return -(-int(c_in) // self.n_c), -(-int(c_out) // self.n_m)
+
     def tile_area_um2(self) -> float:
         """Per-tile silicon area. The CIM array scales with the cell count
         (``n_c x n_m`` over the 256x256 the table quotes — exactly x1.0 at

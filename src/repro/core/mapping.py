@@ -9,12 +9,18 @@ Chips hold ``tiles_per_chip`` tiles (240 in the paper's evaluation, CIM
 arrays of 256 x 256); layers are placed greedily in network order and a
 layer spanning a chip boundary contributes its IFM/OFM traffic to the
 off-chip accounting (paper §IV-B3).
+
+Placement is one pass of the Workload→CompiledProgram compiler
+(``repro.core.program.compile_program``); ``map_network`` survives as a
+deprecated shim over it. The network constructors (``vgg11_cifar`` ...)
+return frozen :class:`~repro.core.program.Workload` objects — immutable
+layer sequences, so code written against plain layer lists keeps working.
 """
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass, field
-from functools import lru_cache
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.arch import DEFAULT_ARCH, ArchSpec
@@ -86,17 +92,19 @@ class TileAlloc:
 
 
 def tiles_for(layer, arch: ArchSpec = DEFAULT_ARCH) -> Tuple[int, Tuple[int, int, int]]:
+    cb, mb = arch.block_partition(layer.c_in, layer.c_out)
     if isinstance(layer, ConvSpec):
-        cb = math.ceil(layer.c_in / arch.n_c)
-        mb = math.ceil(layer.c_out / arch.n_m)
         return layer.k * layer.k * cb * mb, (layer.k * layer.k, cb, mb)
-    cb = math.ceil(layer.c_in / arch.n_c)
-    mb = math.ceil(layer.c_out / arch.n_m)
     return cb * mb, (1, cb, mb)
 
 
-def map_network(layers: List, arch: ArchSpec = DEFAULT_ARCH) -> List[TileAlloc]:
-    """Greedy in-order placement; returns per-layer allocations w/ chip ids."""
+def greedy_place(layers: List, arch: ArchSpec = DEFAULT_ARCH) -> List[TileAlloc]:
+    """Greedy in-order placement pass; per-layer allocations w/ chip ids.
+
+    This is the placement *algorithm*; ``repro.core.program
+    .compile_program`` is the public entry point that runs (and caches) it
+    as part of building a ``CompiledProgram``.
+    """
     tiles_per_chip = arch.tiles_per_chip
     allocs: List[TileAlloc] = []
     chip, used = 0, 0
@@ -121,21 +129,41 @@ def map_network(layers: List, arch: ArchSpec = DEFAULT_ARCH) -> List[TileAlloc]:
     return allocs
 
 
-@lru_cache(maxsize=None)
-def _map_network_cached(layers: Tuple, arch: ArchSpec) -> Tuple[TileAlloc, ...]:
-    return tuple(map_network(list(layers), arch))
+def map_network(layers: List, arch: ArchSpec = DEFAULT_ARCH) -> List[TileAlloc]:
+    """Deprecated: compile the workload instead and read its allocations.
+
+    Thin shim over :func:`repro.core.program.compile_program` — the
+    returned allocations are the program's own (bitwise-identical, same
+    frozen ``TileAlloc`` objects)::
+
+        program = compile_program(Workload.of(layers), arch)
+        allocs = program.allocs
+    """
+    warnings.warn(
+        "map_network() is deprecated; use repro.core.program.compile_program"
+        "(workload, arch) and read CompiledProgram.allocs",
+        DeprecationWarning, stacklevel=2,
+    )
+    layers = list(layers)
+    if not layers:
+        return []
+    from repro.core.program import Workload, compile_program
+
+    return list(compile_program(Workload.of(layers), arch).allocs)
 
 
 def map_network_cached(layers: Tuple, arch: ArchSpec = DEFAULT_ARCH) -> Tuple[TileAlloc, ...]:
-    """``map_network`` memoized on the ``(layers, arch)`` pair.
+    """Legacy cached-mapping accessor, now a view into the compiled program.
 
-    Repeated scenarios over the same network *and* architecture — the sweep
-    engine's common case — get their allocation for free; sweeping geometry
-    or tiles/chip gets its own cache line per ``ArchSpec``. Safe to share:
-    TileAlloc is frozen. (The default-arg call is normalized onto the same
-    cache line as an explicit ``DEFAULT_ARCH``.)
+    Delegates to :func:`repro.core.program.compile_program` (memoized on
+    the ``(workload, arch)`` pair), so repeated calls return the *same*
+    frozen allocation tuple — exactly the sharing the sweep engine's
+    caches rely on. The default-arg call shares the explicit
+    ``DEFAULT_ARCH`` cache line.
     """
-    return _map_network_cached(layers, arch)
+    from repro.core.program import Workload, compile_program
+
+    return compile_program(Workload.of(layers), arch).allocs
 
 
 def total_chips(allocs: List[TileAlloc]) -> int:
@@ -157,6 +185,13 @@ def weight_bytes(layers: List, precision_bits: int = 8) -> int:
 # ---------------------------------------------------------------------------
 
 
+def _workload(name: str, layers: List) -> "Workload":  # noqa: F821
+    # late import: repro.core.program imports this module at load time
+    from repro.core.program import Workload
+
+    return Workload(name, tuple(layers))
+
+
 def _vgg(cfg: List, h: int, w: int, fc: List[Tuple[int, int]], name: str):
     layers: List = []
     c_in = 3
@@ -174,26 +209,30 @@ def _vgg(cfg: List, h: int, w: int, fc: List[Tuple[int, int]], name: str):
     return layers
 
 
-def vgg11_cifar() -> List:
-    return _vgg([64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"],
-                32, 32, [(512, 4096), (4096, 4096), (4096, 10)], "vgg11")
+def vgg11_cifar() -> "Workload":  # noqa: F821
+    return _workload(
+        "vgg11-cifar",
+        _vgg([64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"],
+             32, 32, [(512, 4096), (4096, 4096), (4096, 10)], "vgg11"))
 
 
-def vgg16_imagenet() -> List:
-    return _vgg(
-        [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
-         512, 512, 512, "M", 512, 512, 512, "M"],
-        224, 224, [(512 * 7 * 7, 4096), (4096, 4096), (4096, 1000)], "vgg16")
+def vgg16_imagenet() -> "Workload":  # noqa: F821
+    return _workload(
+        "vgg16-imagenet",
+        _vgg([64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+              512, 512, 512, "M", 512, 512, 512, "M"],
+             224, 224, [(512 * 7 * 7, 4096), (4096, 4096), (4096, 1000)], "vgg16"))
 
 
-def vgg19_imagenet() -> List:
-    return _vgg(
-        [64, 64, "M", 128, 128, "M", 256, 256, 256, 256, "M",
-         512, 512, 512, 512, "M", 512, 512, 512, 512, "M"],
-        224, 224, [(512 * 7 * 7, 4096), (4096, 4096), (4096, 1000)], "vgg19")
+def vgg19_imagenet() -> "Workload":  # noqa: F821
+    return _workload(
+        "vgg19-imagenet",
+        _vgg([64, 64, "M", 128, 128, "M", 256, 256, 256, 256, "M",
+              512, 512, 512, 512, "M", 512, 512, 512, 512, "M"],
+             224, 224, [(512 * 7 * 7, 4096), (4096, 4096), (4096, 1000)], "vgg19"))
 
 
-def resnet18_cifar() -> List:
+def resnet18_cifar() -> "Workload":  # noqa: F821
     """ResNet-18 (CIFAR-10 variant, paper Tab. IV col. [17])."""
     layers: List = [ConvSpec("rn.conv0", 3, 3, 64, 32, 32)]
     h = w = 32
@@ -210,7 +249,7 @@ def resnet18_cifar() -> List:
             )
             c = co
     layers.append(FCSpec("rn.fc", 512, 10))
-    return layers
+    return _workload("resnet18-cifar", layers)
 
 
 NETWORKS = {

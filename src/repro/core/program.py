@@ -1,0 +1,251 @@
+"""Workload → CompiledProgram: the one compile entry point of the stack.
+
+Domino's core claim (paper §III–IV) is that a *compiled, distributed
+instruction schedule* inside the NoC — not ad-hoc per-layer loops — is what
+enables Computing-On-the-Move. This module is that seam as a first-class
+IR:
+
+* :class:`Workload` — a frozen, named DNN layer graph (an immutable
+  sequence of ``ConvSpec``/``FCSpec``; the network constructors
+  ``vgg11_cifar()`` etc. return one).
+* :func:`compile_program` — THE compile entry point. Runs, for one
+  ``(workload, arch)`` pair, every derivation the evaluation stack needs:
+  greedy tile placement, the explicit ``ceil(C/n_c) × ceil(M/n_m)`` block
+  partition of every layer, the per-tile periodic instruction schedules,
+  and the closed-form per-image event counts. Memoized on the hashable
+  pair, so every consumer (``DominoModel``, the sweep engine's batch
+  builder, ``COMGridSim``) shares one compilation instead of re-deriving
+  mappings.
+* :class:`CompiledProgram` / :class:`LayerProgram` / :class:`LayerBlock` —
+  the compiled artifact. Per layer: its ``TileAlloc``, its block chain
+  (each block a ``(c_index, m_index)`` channel slice with the schedule
+  roles its tiles execute), and its event counts. ``COMGridSim.run``
+  executes a layer's block chain functionally (partial sums accumulate
+  across the C-block chain, outputs concatenate across M-blocks), which is
+  what lets cycle-level simulation cross-validate real VGG-scale layers
+  with ``C > n_c``.
+
+The old free-function API (``map_network``, ``compile_layer``,
+``events_for_layers``) survives as deprecated shims that delegate here and
+return bitwise-identical results.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, Iterator, List, Mapping, Tuple, Union
+
+from repro.core.arch import DEFAULT_ARCH, ArchSpec
+from repro.core.mapping import ConvSpec, FCSpec, TileAlloc, greedy_place, total_chips
+from repro.core.schedule import TileSchedule, layer_schedules
+from repro.core.simulator import EVENT_FIELDS, batched_layer_events, layer_table
+
+LayerSpec = Union[ConvSpec, FCSpec]
+
+
+@dataclass(frozen=True)
+class Workload:
+    """A frozen, named DNN layer graph — the input of :func:`compile_program`.
+
+    Behaves as an immutable *sequence* of layer specs (``len``, iteration,
+    indexing), so code written against plain layer lists keeps working —
+    including lists that repeat a spec (the old free-function API accepted
+    those; name-keyed program lookups reject ambiguity at lookup time
+    instead). Equality and hash ignore the display ``name`` and key on the
+    layer tuple alone: two workloads with identical layers share one
+    compile cache line (the anonymous workload a deprecation shim builds
+    hits the same ``CompiledProgram`` as the named one).
+    """
+
+    name: str = field(compare=False)
+    layers: Tuple[LayerSpec, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "layers", tuple(self.layers))
+        if not self.layers:
+            raise ValueError("a Workload must contain at least one layer")
+        problems: List[str] = []
+        for i, l in enumerate(self.layers):
+            if not isinstance(l, (ConvSpec, FCSpec)):
+                problems.append(f"layers[{i}] is not a ConvSpec/FCSpec: {l!r}")
+        if problems:
+            raise ValueError(f"invalid Workload {self.name!r}:\n" + "\n".join(problems))
+
+    @classmethod
+    def of(cls, layers, name: str = "workload") -> "Workload":
+        """Normalize: pass a ``Workload`` through, wrap a layer sequence."""
+        if isinstance(layers, Workload):
+            return layers
+        return cls(name, tuple(layers))
+
+    # ---- sequence protocol (drop-in for the old plain layer lists) ----
+    def __len__(self) -> int:
+        return len(self.layers)
+
+    def __iter__(self) -> Iterator[LayerSpec]:
+        return iter(self.layers)
+
+    def __getitem__(self, i):
+        return self.layers[i]
+
+
+@dataclass(frozen=True)
+class LayerBlock:
+    """One ``(c_index, m_index)`` channel slice of a layer's block grid.
+
+    ``spec`` is the sliced layer spec this block's CIM array actually holds
+    (``c_in = c_range`` width, ``c_out = m_range`` width); ``roles`` are
+    the keys into the owning :class:`LayerProgram`'s ``schedules`` dict
+    that this block's tiles execute. Only the *last* C-block of an M-chain
+    carries the M-type role (activation fires once per output slice, after
+    the partial-sum chain closes).
+    """
+
+    layer_name: str
+    c_index: int
+    m_index: int
+    c_range: Tuple[int, int]       # [start, stop) input-channel slice
+    m_range: Tuple[int, int]       # [start, stop) output-channel slice
+    spec: LayerSpec
+    roles: Tuple[str, ...]
+    n_tiles: int                   # K² for conv blocks, 1 for FC blocks
+    is_last_c: bool = False        # closes the partial-sum chain (fires ACT)
+
+
+@dataclass(frozen=True, eq=False)
+class LayerProgram:
+    """One layer, compiled: allocation + block chain + schedules + events.
+
+    ``blocks`` is row-major over ``(c_index, m_index)`` — the explicit
+    ``c_blocks × m_blocks`` chain; ``events`` are the closed-form
+    per-image event counts (the same numbers ``batched_layer_events``
+    computes, cross-validated against ``COMGridSim``). ``schedules`` (the
+    role→``TileSchedule`` dict) resolves lazily through the memoized
+    ``layer_schedules(layer, arch)`` cache, so programs compiled only for
+    mapping/event consumers (the sweep batch builder) never build
+    instruction tables they don't read.
+    """
+
+    layer: LayerSpec
+    arch: ArchSpec
+    alloc: TileAlloc
+    c_blocks: int
+    m_blocks: int
+    blocks: Tuple[LayerBlock, ...]
+    events: Mapping[str, int]
+
+    @property
+    def schedules(self) -> Mapping[str, TileSchedule]:
+        return layer_schedules(self.layer, self.arch)
+
+    def block(self, c_index: int, m_index: int) -> LayerBlock:
+        return self.blocks[c_index * self.m_blocks + m_index]
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.blocks)
+
+
+@dataclass(frozen=True, eq=False)
+class CompiledProgram:
+    """The compiled artifact of one ``(workload, arch)`` pair.
+
+    Everything downstream consumes this: ``DominoModel`` (Tab. IV
+    evaluation), the sweep engine's batch builder (per-(network, arch)
+    summaries), and ``COMGridSim`` (functional block-chain execution).
+    """
+
+    workload: Workload
+    arch: ArchSpec
+    layer_programs: Tuple[LayerProgram, ...]
+    allocs: Tuple[TileAlloc, ...]
+    event_totals: Mapping[str, int]
+
+    @property
+    def n_tiles(self) -> int:
+        return sum(a.n_tiles for a in self.allocs)
+
+    @property
+    def n_chips(self) -> int:
+        return total_chips(list(self.allocs))
+
+    def layer_program(self, name: str) -> LayerProgram:
+        matches = [lp for lp in self.layer_programs if lp.layer.name == name]
+        if not matches:
+            raise KeyError(
+                f"no layer {name!r} in workload {self.workload.name!r}; "
+                f"known: {[lp.layer.name for lp in self.layer_programs]}"
+            )
+        if len(matches) > 1:
+            raise KeyError(
+                f"layer name {name!r} is ambiguous in workload "
+                f"{self.workload.name!r} ({len(matches)} layers share it); "
+                f"index layer_programs positionally instead"
+            )
+        return matches[0]
+
+
+def _blocks_for(layer: LayerSpec, arch: ArchSpec) -> Tuple[int, int, Tuple[LayerBlock, ...]]:
+    """The explicit block grid of one layer: channel ranges + schedule roles."""
+    cb, mb = arch.block_partition(layer.c_in, layer.c_out)
+    k2 = layer.k * layer.k if isinstance(layer, ConvSpec) else 1
+    blocks: List[LayerBlock] = []
+    for ci in range(cb):
+        cs, ce = ci * arch.n_c, min((ci + 1) * arch.n_c, layer.c_in)
+        for mi in range(mb):
+            ms, me = mi * arch.n_m, min((mi + 1) * arch.n_m, layer.c_out)
+            spec = dataclasses.replace(
+                layer, name=f"{layer.name}[c{ci}m{mi}]",
+                c_in=ce - cs, c_out=me - ms,
+            )
+            if isinstance(layer, ConvSpec):
+                roles = tuple(f"k{i}" for i in range(k2))
+                if ci == cb - 1:
+                    roles += ("mtype_last",)
+            else:
+                roles = (f"r{ci}",)
+            blocks.append(LayerBlock(
+                layer_name=layer.name, c_index=ci, m_index=mi,
+                c_range=(cs, ce), m_range=(ms, me), spec=spec,
+                roles=roles, n_tiles=k2, is_last_c=ci == cb - 1,
+            ))
+    return cb, mb, tuple(blocks)
+
+
+@lru_cache(maxsize=None)
+def _compile_program(workload: Workload, arch: ArchSpec) -> CompiledProgram:
+    layers = workload.layers
+    allocs = tuple(greedy_place(list(layers), arch))
+    per_layer_events = batched_layer_events(layer_table(layers), arch)
+    programs: List[LayerProgram] = []
+    for i, (layer, alloc) in enumerate(zip(layers, allocs)):
+        cb, mb, blocks = _blocks_for(layer, arch)
+        programs.append(LayerProgram(
+            layer=layer, arch=arch, alloc=alloc, c_blocks=cb, m_blocks=mb,
+            blocks=blocks,
+            events={f: int(per_layer_events[f][i]) for f in EVENT_FIELDS},
+        ))
+    return CompiledProgram(
+        workload=workload, arch=arch, layer_programs=tuple(programs),
+        allocs=allocs,
+        event_totals={f: int(per_layer_events[f].sum()) for f in EVENT_FIELDS},
+    )
+
+
+def compile_program(workload, arch: ArchSpec = DEFAULT_ARCH) -> CompiledProgram:
+    """Compile a workload for an architecture — THE evaluation entry point.
+
+    One call derives everything the stack consumes: greedy tile placement
+    (``CompiledProgram.allocs``), the explicit per-layer block partition
+    (``LayerProgram.blocks``), the per-tile periodic instruction schedules
+    (``LayerProgram.schedules``), and the closed-form per-image event
+    counts (``LayerProgram.events`` / ``CompiledProgram.event_totals``).
+
+    Memoized on the frozen ``(workload, arch)`` pair — workload equality
+    keys on the layer tuple, so anonymous and named workloads over the
+    same layers share one program, and repeated sweep scenarios get their
+    compilation for free. ``workload`` may be a :class:`Workload` or any
+    layer sequence (wrapped via :meth:`Workload.of`).
+    """
+    return _compile_program(Workload.of(workload), arch)

@@ -18,6 +18,7 @@ them directly, and tests assert the periods against the paper's formulas.
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass
 from functools import lru_cache
 from typing import Dict, List, Tuple
@@ -78,7 +79,15 @@ def compile_conv_tile(layer: ConvSpec, kpos: int, is_last_row: bool) -> TileSche
             instrs.append(CInstr(rx=rx, sum=s, buf=buf, tx=tx))
     active = 1.0 / (layer.stride * layer.stride)  # shielded cycles for S>1
     role = "conv_last" if is_last_row else "conv"
-    table = ScheduleTable(instrs, period=p)
+    if p <= ScheduleTable.MAX_ENTRIES:
+        table = ScheduleTable(instrs, period=p)
+    else:
+        # wide layers (e.g. ImageNet W=224 -> p=450) exceed the 16b x 128
+        # store; the steady-state stream is 2-periodic in *content* (the
+        # IFM/psum phases alternate two fixed instructions), so the table
+        # holds the compressed loop — at_cycle(c) is unchanged for all c,
+        # and the row timing period stays conv_period(layer)
+        table = ScheduleTable(instrs[:2], period=2)
     return TileSchedule(role=role, table=table, active_frac=active)
 
 
@@ -119,17 +128,27 @@ def compile_fc_tile(layer: FCSpec, row: int, n_rows: int) -> TileSchedule:
     )
 
 
-@lru_cache(maxsize=None)
-def compile_layer(layer, arch: ArchSpec = DEFAULT_ARCH) -> Dict[str, TileSchedule]:
+def layer_schedules(layer, arch: ArchSpec = DEFAULT_ARCH) -> Dict[str, TileSchedule]:
     """All distinct tile schedules of one layer (tiles sharing a role share
     a schedule — this is what keeps NoC instruction bandwidth tiny).
 
+    This is the schedule-compilation pass of ``repro.core.program
+    .compile_program``; a ``LayerProgram`` keeps the returned dict and its
+    ``LayerBlock``s reference entries by role key (``k0..k{K²-1}`` +
+    ``mtype_last`` for conv, ``r{row}`` for FC).
+
     ``arch`` sets the FC row width (``n_c``; the paper's 256 at
     ``DEFAULT_ARCH``, bitwise-identical to the pre-``ArchSpec`` output).
-    Memoized on the frozen ``(layer, arch)`` pair: recompiling the same
+    Memoized on the frozen ``(layer, arch)`` pair (the default-arg call
+    shares the explicit-``DEFAULT_ARCH`` cache line): recompiling the same
     layer — e.g. across sweep scenarios or network replicas — returns the
-    cached tables. Callers must treat the returned dict as read-only.
+    *same* cached dict. Callers must treat it as read-only.
     """
+    return _layer_schedules(layer, arch)
+
+
+@lru_cache(maxsize=None)
+def _layer_schedules(layer, arch: ArchSpec) -> Dict[str, TileSchedule]:
     out: Dict[str, TileSchedule] = {}
     if isinstance(layer, ConvSpec):
         k2 = layer.k * layer.k
@@ -143,18 +162,56 @@ def compile_layer(layer, arch: ArchSpec = DEFAULT_ARCH) -> Dict[str, TileSchedul
     return out
 
 
-def steady_cycles_per_image(layers: List, arch: ArchSpec = DEFAULT_ARCH) -> Tuple[int, Dict[str, int]]:
+def compile_layer(layer, arch: ArchSpec = DEFAULT_ARCH) -> Dict[str, TileSchedule]:
+    """Deprecated: compile the workload instead and read the layer program.
+
+    Thin shim over :func:`repro.core.program.compile_program` — returns
+    the single-layer program's role→schedule dict, which is the *same
+    cached object* ``layer_schedules(layer, arch)`` holds (bitwise- and
+    identity-stable across calls)::
+
+        program = compile_program(Workload.of([layer]), arch)
+        schedules = program.layer_programs[0].schedules
+    """
+    warnings.warn(
+        "compile_layer() is deprecated; use repro.core.program."
+        "compile_program(workload, arch) and read LayerProgram.schedules "
+        "(or layer_schedules(layer, arch) for one layer)",
+        DeprecationWarning, stacklevel=2,
+    )
+    from repro.core.program import Workload, compile_program
+
+    return compile_program(Workload.of((layer,)), arch).layer_programs[0].schedules
+
+
+def steady_cycles_per_image(workload, arch: ArchSpec = DEFAULT_ARCH) -> Tuple[int, Dict[str, int]]:
     """Pipeline model (paper §IV-B2): with COM all layers stream concurrently;
     one image occupies the pipe for H_out x W_out cycles of the *bottleneck*
-    (largest-output) layer, plus per-layer fill of one period each.
-    ``arch.n_c`` sets the FC column depth (``fc_rows``).
+    (largest-output) layer, plus per-layer pipeline fill.
+
+    Multi-block aware: a conv layer with ``C > n_c`` is a *chain* of
+    ``ceil(C/n_c)`` accumulating block groups, so its fill is one period
+    per chained group (``p · c_blocks``), not one period flat; an FC layer
+    already fills its ``fc_rows = ceil(c_in/n_c)`` systolic column depth.
+    ``m_blocks`` output slices run in parallel and do not deepen the pipe.
+
+    ``workload`` may be a :class:`~repro.core.program.Workload`, a plain
+    layer sequence, or a :class:`~repro.core.program.CompiledProgram`
+    (whose own ``arch`` then wins).
     """
+    from repro.core.program import CompiledProgram
+
+    if isinstance(workload, CompiledProgram):
+        layers, arch = workload.workload.layers, workload.arch
+    else:
+        layers = tuple(workload)
     per_layer: Dict[str, int] = {}
     fill = 0
     steady = 0
     for l in layers:
+        c_blocks, _ = arch.block_partition(l.c_in, l.c_out)
         if isinstance(l, ConvSpec):
-            p = conv_period(l)
+            p = conv_period(l) * c_blocks
             per_layer[l.name] = p
             fill += p
             steady = max(steady, l.h_out * l.w_out)

@@ -2,12 +2,14 @@
 
 Two layers of fidelity, cross-validated in tests:
 
-1. ``COMGridSim`` — cycle-stepped functional simulation of one conv layer's
-   tile chain executing its compiled ScheduleTables: IFM rows stream through
-   RIFMs, PEs fire MACs, ROFMs add partial sums on the move, queue
-   group-sums in bounded buffers, and the last tile applies the M-type
-   activation/pooling. Produces (a) the exact conv output (validated against
-   a jnp reference) and (b) event counts (hops, adds, buffer ops).
+1. ``COMGridSim`` — functional simulation of one layer's *compiled block
+   chain* (``repro.core.program``): IFM rows stream through RIFMs, PEs fire
+   MACs, ROFMs add partial sums on the move, queue group-sums in bounded
+   buffers, partial sums accumulate across chained C-blocks (C > N_C),
+   outputs concatenate across M-blocks (M > N_M), and the last tile applies
+   the M-type activation. Handles conv and FC layers at real VGG scale.
+   Produces (a) the exact layer output (validated against a reference conv
+   / NumPy FC) and (b) event counts (hops, adds, buffer ops).
 
 2. ``DominoModel`` — analytic event counts for full networks (VGG-11/16/19,
    ResNet-18) feeding the Tab. III energy model; reproduces Tab. IV
@@ -26,6 +28,7 @@ Model assumptions (documented in EXPERIMENTS.md; calibrated constants below):
 from __future__ import annotations
 
 import math
+import warnings
 from collections import defaultdict
 from dataclasses import dataclass, field
 from functools import lru_cache
@@ -43,8 +46,6 @@ from repro.core.mapping import (
     ConvSpec,
     FCSpec,
     TileAlloc,
-    map_network,
-    map_network_cached,
     tiles_for,
     total_chips,
 )
@@ -63,8 +64,13 @@ LINK_PJ_PER_BIT = DEFAULT_ARCH.energy.link_pj_per_bit  # NoC pJ per bit-hop
 
 
 # ---------------------------------------------------------------------------
-# 1. Cycle-stepped COM simulation of one conv layer chain
+# 1. Cycle-stepped COM simulation of one layer's compiled block chain
 # ---------------------------------------------------------------------------
+
+# bound on the gathered conv MAC-operand grid per einsum (the oy axis is
+# processed in row chunks of at most this many bytes; results and event
+# counts are chunking-invariant)
+_CONV_CHUNK_BYTES = 32e6
 
 
 @dataclass
@@ -87,77 +93,181 @@ class Events:
 
 
 class COMGridSim:
-    """Executes the COM dataflow for one conv layer (single c/m block:
-    C<=N_C, M<=N_M) over K² chained tiles, following the compiled schedule
-    semantics. Computes real outputs and counts events.
+    """Executes the COM dataflow of one layer's ``CompiledProgram`` block
+    chain — conv *or* FC, including multi-block layers (``C > n_c`` and/or
+    ``M > n_m``) — following the compiled schedule semantics. Computes real
+    outputs and counts events.
+
+    Execution is the explicit ``LayerProgram.blocks`` grid: for every
+    M-block (output-channel slice) the partial sums accumulate across the
+    chained C-blocks (the cross-block ADD_RX handoff), and the last
+    C-block's M-type tile applies the activation; M-block outputs
+    concatenate on the output-channel axis. Conv blocks evaluate as one
+    full-image einsum vectorized over the ``oy`` axis — every (oy, ox, kr,
+    kc) MAC of a block fires at once and the psum / group-sum additions
+    reduce over the kc then kr axes, so outputs and event counts are
+    identical to the elementwise chain walk while running orders of
+    magnitude faster. This is what lets cycle-level simulation
+    cross-validate ``reference_conv`` on real VGG-scale layers (e.g. the
+    C=512 convs of VGG-16) instead of toy single-block shapes.
+
+    Pooling fused onto a conv layer (``pool_k > 0``) is an energy-model
+    event (``pool_cmp``), not part of the functional output — the sim
+    returns the pre-pool activation, as before.
     """
 
-    def __init__(self, layer: ConvSpec, weights: np.ndarray,
-                 arch: ArchSpec = DEFAULT_ARCH):
-        assert layer.c_in <= arch.n_c and layer.c_out <= arch.n_m
-        assert weights.shape == (layer.k, layer.k, layer.c_in, layer.c_out)
+    def __init__(self, layer, weights: np.ndarray,
+                 arch: Optional[ArchSpec] = None, *, program=None):
+        from repro.core.program import Workload, compile_program
+
+        if program is None:
+            program = compile_program(
+                Workload(f"sim:{layer.name}", (layer,)), arch or DEFAULT_ARCH)
+        elif arch is not None and arch != program.arch:
+            raise ValueError(
+                "conflicting architectures: an explicit arch was passed "
+                "alongside a program compiled for a different ArchSpec — "
+                "recompile the program for the intended arch instead"
+            )
+        arch = program.arch
+        self.program = program
+        self.lp = next(
+            (lp for lp in program.layer_programs if lp.layer == layer), None)
+        if self.lp is None:
+            raise KeyError(f"layer {layer.name!r} is not in the program")
+        expect = (
+            (layer.k, layer.k, layer.c_in, layer.c_out)
+            if isinstance(layer, ConvSpec) else (layer.c_in, layer.c_out)
+        )
+        if weights.shape != expect:
+            raise ValueError(
+                f"weights shape {weights.shape} != {expect} for {layer.name!r}")
         self.layer = layer
         self.arch = arch
         self.w = weights.astype(np.float64)
         self.ev = Events()
 
-    def run(self, ifm: np.ndarray) -> np.ndarray:
-        """ifm: (H, W, C) -> (H_out, W_out, M). Functional COM execution:
-        partial sums travel the kernel-row chain (E direction), group-sums
-        queue in the row-end tile's buffer and add on the move (S direction),
-        exactly the Fig. 3 pipeline; event counts mirror the data movement.
+    @classmethod
+    def from_program(cls, program, layer_name: str,
+                     weights: np.ndarray) -> "COMGridSim":
+        """Simulate one layer of a compiled *network* program (the block
+        chain, schedules, and event forms all come from the program)."""
+        lp = program.layer_program(layer_name)
+        return cls(lp.layer, weights, program.arch, program=program)
 
-        The (ox, kr, kc) inner chains are evaluated as one einsum per output
-        row — every (ox, kr, kc) MAC of the row fires at once and the psum /
-        group-sum additions reduce over the kc then kr axes, so the outputs
-        and event counts are identical to the elementwise chain walk while
-        running orders of magnitude faster.
+    def run(self, ifm: np.ndarray) -> np.ndarray:
+        """Execute the layer's block chain on a real input.
+
+        Conv: ``(H, W, C) -> (H_out, W_out, M)``; FC: ``(C_in,) ->
+        (C_out,)``. Event counts mirror the data movement and match the
+        closed forms in ``batched_layer_events`` exactly.
         """
-        L = self.layer
+        if isinstance(self.layer, ConvSpec):
+            return self._run_conv(ifm)
+        return self._run_fc(ifm)
+
+    def _run_conv(self, ifm: np.ndarray) -> np.ndarray:
+        L, lp = self.layer, self.lp
         K, P, S = L.k, L.padding, L.stride
         H, W, C = ifm.shape
         Ho, Wo, M = L.h_out, L.w_out, L.c_out
         x = np.pad(ifm.astype(np.float64), ((P, P), (P, P), (0, 0)))
-        out = np.zeros((Ho, Wo, M))
+        out = np.empty((Ho, Wo, M))
+        px = Ho * Wo
         m_bits = min(M, self.arch.n_m) * 8
-        # gather index: patch column of (ox, kc) inside a padded IFM row
+        c_bits = min(C, self.arch.n_c) * 8
+        # gather indices: patches[oy, kr, ox, kc, c] is the MAC operand
+        # grid — the oy loop of the per-row walk, vectorized. The gather
+        # copies K² slices of the padded IFM, so chunk the oy axis to keep
+        # the operand bounded (~32 MB) on big feature maps (224² inputs
+        # would otherwise materialize a >200 MB grid at once).
+        row_idx = np.arange(Ho)[:, None] * S + np.arange(K)[None, :]
         col_idx = np.arange(Wo)[:, None] * S + np.arange(K)[None, :]
+        bytes_per_row = K * Wo * K * C * 8
+        chunk = max(1, min(Ho, int(_CONV_CHUNK_BYTES // max(bytes_per_row, 1))))
+        for y0 in range(0, Ho, chunk):
+            patches = x[row_idx[y0:y0 + chunk, :, None, None],
+                        col_idx[None, None, :, :], :]
+            for mi in range(lp.m_blocks):
+                acc = None
+                for ci in range(lp.c_blocks):
+                    blk = lp.block(ci, mi)
+                    (cs, ce), (ms, me) = blk.c_range, blk.m_range
+                    # this block's K² chain: PE MACs + kernel-row psum
+                    # chain (E) + group-sum chain (S), a row-chunk at once
+                    part = np.einsum(
+                        "yrxkc,rkcm->yxm",
+                        patches[..., cs:ce], self.w[:, :, cs:ce, ms:me],
+                    )
+                    acc = part if acc is None else acc + part
+                # chain closed: the last C-block's M-type tile activates
+                out[y0:y0 + chunk, :, ms:me] = np.maximum(acc, 0.0)
 
-        for oy in range(Ho):
-            # every output row is one schedule period p = 2(P+W)
-            self.ev.cycles += conv_period(L)
-            # rows[kr, xw, c] holds the K padded IFM rows feeding output row
-            # oy; patches[kr, ox, kc, c] is the (ox, kr, kc) MAC operand grid
-            rows = x[oy * S : oy * S + K]
-            patches = rows[:, col_idx, :]
-            # PE MACs + kernel-row psum chain (E) + group-sum chain (S):
-            # reduce kc within each kernel row, then kr down the row-end tiles
-            total = np.einsum("rxkc,rkcm->xm", patches, self.w)
-            # last tile: M-type activation
-            out[oy] = np.maximum(total, 0.0)
-            # event counts per output row, read off the einsum operands that
-            # actually fired (n_win output steps x n_rows x n_cols MAC grid);
-            # the reduction tree adds n_cols per row chain + (n_rows-1) for
-            # the S-direction group-sum combine
-            n_rows_k, n_win, n_cols = patches.shape[0], patches.shape[1], patches.shape[2]
-            chain_adds = n_win * (n_rows_k * n_cols + n_rows_k - 1)
-            self.ev.pe_macs += n_win * n_rows_k * n_cols
-            self.ev.adds += chain_adds
-            self.ev.ps_hops += chain_adds
-            self.ev.ps_bits += chain_adds * m_bits
-            # row end: every kernel row queues one group-sum (WR_BUF/PUSH)
-            # which the S-direction combine pops in the same output step
-            self.ev.buf_push += n_win * n_rows_k
-            self.ev.buf_pop += n_win * n_rows_k
-            self.ev.act += n_win
-            # IFM streaming: each input row segment visits the K² chain once
-            # per output row (in-buffer shift gives K-row reuse)
-            self.ev.ifm_hops += K * K * (W + 2 * P)
-            self.ev.ifm_bits += K * K * (W + 2 * P) * min(C, self.arch.n_c) * 8
-        # the bounded ROFM queues hold at most one group-sum per kernel row:
-        # each output step pushes K and pops K (same invariant the chain walk
-        # observed via max(len(queue)) + 1)
+        # per-block events, uniform over the block grid (a CIM array fires
+        # whole rows/cols; ragged last blocks hold zeros) — exactly the
+        # closed forms' convention, independent of the execution chunking
+        for mi in range(lp.m_blocks):
+            for ci in range(lp.c_blocks):
+                chain_adds = px * (K * K + K - 1)
+                self.ev.pe_macs += px * K * K
+                self.ev.adds += chain_adds
+                self.ev.ps_hops += chain_adds
+                self.ev.ps_bits += chain_adds * m_bits
+                # row end: every kernel row queues one group-sum
+                # (WR_BUF/PUSH) popped by the S-direction combine
+                self.ev.buf_push += px * K
+                self.ev.buf_pop += px * K
+                if ci > 0:
+                    # cross-block handoff: the chained C-block receives the
+                    # previous block's partial sum (ADD_RX) per output px
+                    self.ev.ps_hops += px
+                    self.ev.ps_bits += px * m_bits
+                    self.ev.adds += px
+            self.ev.act += px
+        # IFM streaming: each input row segment visits one C-block's K²
+        # chain once per output row (in-buffer shift gives K-row reuse);
+        # M-blocks of the same C-slice share the stream
+        self.ev.ifm_hops += lp.c_blocks * Ho * K * K * (W + 2 * P)
+        self.ev.ifm_bits += lp.c_blocks * Ho * K * K * (W + 2 * P) * c_bits
+        # every output row is one schedule period p = 2(P+W); the block
+        # grid pipelines in parallel planes and does not slow the stream
+        self.ev.cycles += Ho * conv_period(L)
+        # the bounded ROFM queues hold at most one group-sum per kernel
+        # row: each output step pushes K and pops K
         self.max_queue_depth = 1 if (Ho > 0 and Wo > 0) else 0
+        return out
+
+    def _run_fc(self, x: np.ndarray) -> np.ndarray:
+        """FC systolic columns: each M-block is a column of chained C-block
+        rows, each row adding its MVM slice to the arriving sum (ADD_RX |
+        ADD_PE) and forwarding S; the last row activates (M-type ACT)."""
+        L, lp = self.layer, self.lp
+        assert x.shape == (L.c_in,)
+        x = x.astype(np.float64)
+        out = np.empty(L.c_out)
+        m_bits = min(L.c_out, self.arch.n_m) * 8
+        c_bits = min(L.c_in, self.arch.n_c) * 8
+        for mi in range(lp.m_blocks):
+            acc = None
+            for ci in range(lp.c_blocks):
+                blk = lp.block(ci, mi)
+                (cs, ce), (ms, me) = blk.c_range, blk.m_range
+                part = x[cs:ce] @ self.w[cs:ce, ms:me]
+                acc = part if acc is None else acc + part
+                self.ev.pe_macs += 1       # one MVM vector op per block
+                self.ev.ifm_hops += 1      # IFM slice into this row
+                self.ev.ifm_bits += c_bits
+                if ci > 0:                 # arriving column sum (ADD_RX)
+                    self.ev.ps_hops += 1
+                    self.ev.ps_bits += m_bits
+                    self.ev.adds += 1
+            (ms, me) = lp.block(0, mi).m_range
+            out[ms:me] = np.maximum(acc, 0.0)
+            self.ev.act += 1
+            self.ev.ps_hops += 1           # column egress hop
+            self.ev.ps_bits += m_bits
+        self.ev.cycles += lp.c_blocks + 2  # fill + egress of the column
+        self.max_queue_depth = 0
         return out
 
 
@@ -171,6 +281,12 @@ def reference_conv(ifm: np.ndarray, w: np.ndarray, layer: ConvSpec) -> np.ndarra
             patch = x[oy * S : oy * S + layer.k, ox * S : ox * S + layer.k, :]
             out[oy, ox] = np.einsum("klc,klcm->m", patch, w)
     return np.maximum(out, 0.0)
+
+
+def reference_fc(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """NumPy FC reference: ``relu(x @ w)`` (matches the FC systolic column
+    semantics — ACT fires at the last row)."""
+    return np.maximum(x.astype(np.float64) @ w.astype(np.float64), 0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -284,7 +400,27 @@ def network_event_totals(layers: Tuple, arch: ArchSpec = DEFAULT_ARCH) -> Dict[s
 
 
 def events_for_layers(layers, arch: ArchSpec = DEFAULT_ARCH) -> Events:
-    return Events(**network_event_totals(tuple(layers), arch))
+    """Deprecated: compile the workload instead and read its event totals.
+
+    Thin shim over :func:`repro.core.program.compile_program` — the
+    returned counts are the program's own ``event_totals`` (bitwise-
+    identical integers)::
+
+        program = compile_program(Workload.of(layers), arch)
+        totals = program.event_totals
+    """
+    warnings.warn(
+        "events_for_layers() is deprecated; use repro.core.program."
+        "compile_program(workload, arch) and read CompiledProgram"
+        ".event_totals (or network_event_totals for the raw closed forms)",
+        DeprecationWarning, stacklevel=2,
+    )
+    layers = tuple(layers)
+    if not layers:
+        return Events()
+    from repro.core.program import Workload, compile_program
+
+    return Events(**compile_program(Workload.of(layers), arch).event_totals)
 
 
 def conv_events(layer: ConvSpec, arch: ArchSpec = DEFAULT_ARCH) -> Events:
@@ -292,11 +428,11 @@ def conv_events(layer: ConvSpec, arch: ArchSpec = DEFAULT_ARCH) -> Events:
 
     Thin scalar wrapper over the batched path (one-row LayerTable).
     """
-    return events_for_layers((layer,), arch)
+    return Events(**network_event_totals((layer,), arch))
 
 
 def fc_events(layer: FCSpec, arch: ArchSpec = DEFAULT_ARCH) -> Events:
-    return events_for_layers((layer,), arch)
+    return Events(**network_event_totals((layer,), arch))
 
 
 def onchip_pj_from_events(ev: Dict[str, "np.ndarray | int | float"],
@@ -364,20 +500,42 @@ class PowerBreakdown:
 class DominoModel:
     """Full-network Domino evaluation (paper Tab. IV columns).
 
+    Consumes a :class:`~repro.core.program.CompiledProgram`: pass one
+    directly (its ``arch`` applies; passing a *conflicting* explicit
+    ``arch`` raises), or pass a ``Workload``/layer sequence and the model
+    compiles it via ``compile_program`` — either way the mapping, block
+    partition, and event totals come from the shared compile cache instead
+    of being re-derived per consumer.
+
     ``arch`` carries every architecture knob (geometry, tiles/chip, clocks,
     energy table); ``precision_bits`` overrides ``arch.precision_bits`` for
     backward compatibility with the pre-`ArchSpec` signature.
     """
 
-    def __init__(self, layers: List, *, arch: ArchSpec = DEFAULT_ARCH,
+    def __init__(self, layers, *, arch: Optional[ArchSpec] = None,
                  precision_bits: Optional[int] = None):
-        self.layers = layers
+        from repro.core.program import CompiledProgram, Workload, compile_program
+
+        if isinstance(layers, CompiledProgram):
+            if arch is not None and arch != layers.arch:
+                raise ValueError(
+                    "conflicting architectures: an explicit arch was passed "
+                    "alongside a program compiled for a different ArchSpec — "
+                    "recompile the program for the intended arch instead"
+                )
+            self.program = layers
+            arch = layers.arch
+        else:
+            arch = DEFAULT_ARCH if arch is None else arch
+            self.program = compile_program(Workload.of(layers), arch)
+        self.workload = self.program.workload
+        self.layers = list(self.workload.layers)
         self.arch = arch
         # shared frozen allocations (cached across models of one network
-        # x architecture pair)
-        self.allocs: List[TileAlloc] = list(map_network_cached(tuple(layers), arch))
-        self.n_tiles = sum(a.n_tiles for a in self.allocs)
-        self.n_chips = total_chips(self.allocs)
+        # x architecture pair — the program IS the cache line)
+        self.allocs: List[TileAlloc] = list(self.program.allocs)
+        self.n_tiles = self.program.n_tiles
+        self.n_chips = self.program.n_chips
         self.bits = arch.precision_bits if precision_bits is None else precision_bits
 
     # ---- structure ----
@@ -430,11 +588,12 @@ class DominoModel:
 
     # ---- energy ----
     def events(self) -> Events:
-        return events_for_layers(self.layers, self.arch)
+        return Events(**self.program.event_totals)
 
     def onchip_energy_img_j(self) -> float:
-        ev = network_event_totals(tuple(self.layers), self.arch)
-        return float(onchip_pj_from_events(ev, self.arch)) * 1e-12
+        return float(
+            onchip_pj_from_events(self.program.event_totals, self.arch)
+        ) * 1e-12
 
     def offchip_bits_img(self) -> float:
         return offchip_values_img(self.allocs) * self.bits

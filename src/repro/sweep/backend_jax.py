@@ -6,7 +6,11 @@ oracle; this module lowers the identical closed forms to a single
 broadcast of the grid axes, every column's elementwise math, and the final
 flatten fuse into one XLA executable — 1e5+-scenario grids (pareto
 searches over CIM array geometry) evaluate in a few device passes instead
-of dozens of NumPy temporaries.
+of dozens of NumPy temporaries. Both backends consume the same
+``ScenarioBatch``, whose per-(network, arch) summaries the batch builder
+reads off ONE cached ``compile_program`` call per combo (the
+Workload→CompiledProgram IR in ``repro.core.program``) — neither backend
+ever re-derives a mapping.
 
 Numerics: the kernel runs in float64 (via the ``jax.experimental
 .enable_x64`` scope, regardless of the session-wide x64 default) so it is

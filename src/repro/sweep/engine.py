@@ -1,10 +1,11 @@
 """Batched design-space sweep engine with pluggable evaluation backends.
 
 Evaluates a whole ``SweepGrid`` in one shot. The scenario-independent
-quantities (event totals via the vectorized per-layer closed forms, on-chip
-energy, mapping, pipeline structure) are computed once per *(network,
-architecture)* combo and memoized; the scenario-dependent Tab. IV columns
-are then pure array expressions over the stacked scenario axes.
+quantities (event totals, on-chip energy, mapping, pipeline structure) come
+from ONE ``compile_program`` call per *(network, architecture)* combo — the
+batch builder consumes the cached ``CompiledProgram`` instead of re-deriving
+mappings; the scenario-dependent Tab. IV columns are then pure array
+expressions over the stacked scenario axes.
 
 Backends (``run_sweep(grid, backend=...)``):
 
@@ -30,6 +31,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.arch import DEFAULT_ARCH, ArchSpec
+from repro.core.program import compile_program
 from repro.core.simulator import DominoModel, offchip_values_img
 from repro.sweep.registry import resolve_network
 from repro.sweep.scenario import Scenario, SweepGrid, validate_scenario
@@ -69,8 +71,9 @@ class NetworkSummary:
 
 @lru_cache(maxsize=None)
 def _network_summary(name: str, arch: ArchSpec) -> NetworkSummary:
-    layers = resolve_network(name)
-    model = DominoModel(list(layers), arch=arch)
+    # one compile per (workload, arch): the summary reads the program's
+    # placement/block/event artifacts instead of re-deriving mappings
+    model = DominoModel(compile_program(resolve_network(name), arch))
     return NetworkSummary(
         name=name,
         n_tiles=model.n_tiles,
@@ -145,10 +148,11 @@ class ScenarioBatch:
 def build_batch(grid: SweepGrid, arch: ArchSpec = DEFAULT_ARCH) -> ScenarioBatch:
     """Lower a validated grid to backend input arrays.
 
-    Per-(network, architecture) summaries are computed through the scalar
-    model stack (and cached on the hashable ``(name, ArchSpec)`` key);
-    everything else is a cheap axis array. No per-scenario Python objects
-    are materialized — this is what lets 1e5+-scenario grids run.
+    Per-(network, architecture) summaries read the compiled program for
+    each combo (``compile_program``, cached on the hashable ``(workload,
+    ArchSpec)`` key); everything else is a cheap axis array. No
+    per-scenario Python objects are materialized — this is what lets
+    1e5+-scenario grids run.
     """
     shape = grid.shape
     summary = {
@@ -334,5 +338,5 @@ def evaluate_scenario(s: Scenario, arch: ArchSpec = DEFAULT_ARCH) -> Dict[str, f
     (``DominoModel.evaluate``) — the oracle the batched engine is golden-
     tested against."""
     validate_scenario(s)
-    model = DominoModel(list(resolve_network(s.network)), arch=s.arch(arch))
+    model = DominoModel(compile_program(resolve_network(s.network), s.arch(arch)))
     return model.evaluate(s.e_mac_pj, n_chips=s.n_chips)

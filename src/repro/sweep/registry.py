@@ -6,8 +6,9 @@ Two namespaces:
   * ``llm:<arch-id>`` for every seed config in ``repro.configs`` via the
     FC-chain bridge (``repro.sweep.llm_bridge``).
 
-``resolve_network`` returns the (hashable, cached) layer tuple a name maps
-to — the key the mapping/schedule/event caches are all keyed on.
+``resolve_network`` returns the (hashable, cached) frozen ``Workload`` a
+name maps to — the key ``compile_program`` (and with it every mapping/
+schedule/event cache) is keyed on.
 """
 from __future__ import annotations
 
@@ -16,6 +17,7 @@ from typing import Tuple
 
 from repro.configs import ARCHS, get_config
 from repro.core.mapping import NETWORKS
+from repro.core.program import Workload
 from repro.sweep.llm_bridge import fc_network_from_config
 
 LLM_PREFIX = "llm:"
@@ -29,13 +31,15 @@ def available_networks() -> Tuple[str, ...]:
 
 
 @lru_cache(maxsize=None)
-def resolve_network(name: str) -> Tuple:
-    """Name -> immutable layer-spec tuple (raises KeyError for unknowns —
-    grids are validated before they get here)."""
+def resolve_network(name: str) -> Workload:
+    """Name -> frozen ``Workload`` (raises KeyError for unknowns — grids
+    are validated before they get here). Cached, so repeated scenarios
+    share one workload object and one compile cache line."""
     if name in NETWORKS:
-        return tuple(NETWORKS[name]())
+        return NETWORKS[name]()
     if name.startswith(LLM_PREFIX):
-        return fc_network_from_config(get_config(name[len(LLM_PREFIX):]))
+        return Workload(
+            name, fc_network_from_config(get_config(name[len(LLM_PREFIX):])))
     raise KeyError(
         f"unknown network {name!r}; known: {list(available_networks())}"
     )

@@ -288,3 +288,59 @@ ENTRY %main (p: f32[8,8]) -> f32[8,8] {
     res = analyze_hlo(txt, num_devices=8)
     # ring all-reduce over groups of 4: 2*(3/4)*256 bytes
     assert res["collective_bytes_per_device"]["all-reduce"] == pytest.approx(2 * 0.75 * 256)
+
+
+# ---------------------------------------------------------------------------
+# benchmark-artifact regression differ (tools/compare_bench.py)
+# ---------------------------------------------------------------------------
+
+
+def _load_compare_bench():
+    import importlib.util
+
+    path = os.path.join(os.path.dirname(__file__), "..", "tools", "compare_bench.py")
+    spec = importlib.util.spec_from_file_location("compare_bench", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_compare_bench_flags_fidelity_not_perf():
+    cb = _load_compare_bench()
+    base = dict(tokens_s=100.0, wall_s=1.0, generated_tokens=512,
+                decode_steps=124, occupancy=4.0,
+                decode_steps_per_token=0.25, matches_sequential=True)
+    # perf craters (noisy runner) but fidelity intact -> no regression
+    cur = dict(base, tokens_s=40.0, wall_s=2.5)
+    rows, regressions = cb.compare(base, cur, 1e-9, 0.5)
+    assert regressions == 0
+    by = {r["metric"]: r for r in rows}
+    assert by["tokens_s"]["status"] == "drift"
+    assert by["occupancy"]["status"] == "ok"
+    # a fidelity metric moving is a regression
+    cur2 = dict(base, occupancy=3.5)
+    rows2, regressions2 = cb.compare(base, cur2, 1e-9, 0.5)
+    assert regressions2 == 1
+    assert {r["metric"]: r for r in rows2}["occupancy"]["status"] == "REGRESSION"
+
+
+def test_compare_bench_sweep_rows_aggregates_and_strict_exit():
+    cb = _load_compare_bench()
+    mk = lambda ce: dict(  # noqa: E731
+        n_scenarios=2, backends={"numpy": {"engine_wall_s": 1e-3}},
+        rows=[dict(img_s=1.0, power_w=2.0, ce_tops_w=c, thr_tops_mm2=1.0,
+                   area_mm2=5.0, exec_us=10.0) for c in ce],
+    )
+    base, same, worse = mk([10.0, 20.0]), mk([10.0, 20.0]), mk([10.0, 18.0])
+    assert cb.compare(base, same, 1e-9, 0.5)[1] == 0
+    rows, n = cb.compare(base, worse, 1e-9, 0.5)
+    assert n >= 1
+    assert {r["metric"]: r for r in rows}["rows:ce_tops_w:mean"]["status"] == "REGRESSION"
+    # strict mode turns fidelity regressions into a failing exit code
+    with tempfile.TemporaryDirectory() as d:
+        pb, pc = os.path.join(d, "b.json"), os.path.join(d, "c.json")
+        json.dump(base, open(pb, "w")); json.dump(worse, open(pc, "w"))
+        assert cb.main([pc, "--baseline", pb]) == 0            # non-blocking
+        assert cb.main([pc, "--baseline", pb, "--strict"]) == 1
+        json.dump(same, open(pc, "w"))
+        assert cb.main([pc, "--baseline", pb, "--strict"]) == 0

@@ -11,8 +11,8 @@ from repro.core.schedule import (
     compile_conv_tile,
     compile_fc_tile,
     compile_last_row_mtype,
-    compile_layer,
     conv_period,
+    layer_schedules,
     pool_period,
 )
 
@@ -127,7 +127,7 @@ def test_residual_layer_emits_bypass():
 
 def test_compile_layer_shares_schedules():
     layer = ConvSpec("l", 3, 300, 300, 8, 8)  # cb=2, mb=2
-    scheds = compile_layer(layer)
+    scheds = layer_schedules(layer)
     # distinct schedules per kernel position + M-type: K²+1 — NOT per tile
     # (36 tiles share 10 schedules => tiny instruction bandwidth)
     assert len(scheds) == 9 + 1

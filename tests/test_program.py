@@ -1,0 +1,351 @@
+"""Workload→CompiledProgram IR: the single compile entry point.
+
+Covers (a) the golden deprecation contract — the old free-function API
+(``map_network``/``compile_layer``/``events_for_layers``) warns and stays
+bitwise-identical to ``compile_program`` for DEFAULT_ARCH; (b) multi-block
+correctness — randomized C>N_C / M>N_M conv and FC layers where
+``COMGridSim.run`` matches the references to 1e-6 and event totals match
+the ``batched_layer_events`` closed forms; (c) a genuine VGG-16 layer
+(C=512 > N_C=256) executed through the full-network program's block chain.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.arch import DEFAULT_ARCH, ArchSpec
+from repro.core.mapping import (
+    NETWORKS,
+    ConvSpec,
+    FCSpec,
+    map_network,
+    map_network_cached,
+    vgg11_cifar,
+    vgg16_imagenet,
+)
+from repro.core.program import CompiledProgram, Workload, compile_program
+from repro.core.schedule import (
+    compile_layer,
+    conv_period,
+    layer_schedules,
+    steady_cycles_per_image,
+)
+from repro.core.simulator import (
+    COMGridSim,
+    DominoModel,
+    EVENT_FIELDS,
+    events_for_layers,
+    network_event_totals,
+    reference_conv,
+    reference_fc,
+)
+
+# fields COMGridSim counts (pool_cmp is energy-model-only: the sim returns
+# the pre-pool activation and the test layers carry no fused pooling)
+SIM_FIELDS = ("ps_hops", "ps_bits", "ifm_hops", "ifm_bits", "adds",
+              "buf_push", "buf_pop", "act", "pe_macs", "cycles")
+
+
+def _assert_sim_events_match_closed_forms(sim, layer, arch):
+    totals = network_event_totals((layer,), arch)
+    for f in SIM_FIELDS:
+        assert getattr(sim.ev, f) == totals[f], (
+            f, getattr(sim.ev, f), totals[f])
+
+
+# ---------------------------------------------------------------------------
+# Workload / CompiledProgram structure
+# ---------------------------------------------------------------------------
+
+
+def test_workload_is_a_frozen_named_layer_sequence():
+    wl = vgg11_cifar()
+    assert isinstance(wl, Workload) and wl.name == "vgg11-cifar"
+    assert len(wl) == 11 and list(wl) == list(wl.layers)
+    assert isinstance(wl[0], ConvSpec) and isinstance(wl[-1], FCSpec)
+    with pytest.raises(Exception):
+        wl.layers = ()
+    # equality/hash key on the layers, not the display name: anonymous
+    # wrappers share the named workload's compile cache line
+    anon = Workload.of(list(wl))
+    assert anon == wl and hash(anon) == hash(wl)
+    assert Workload.of(wl) is wl
+
+
+def test_workload_validates_layers():
+    with pytest.raises(ValueError, match="at least one layer"):
+        Workload("empty", ())
+    with pytest.raises(ValueError, match="not a ConvSpec/FCSpec"):
+        Workload("bad", (FCSpec("a", 8, 8), "nope"))
+
+
+def test_workload_accepts_repeated_specs_like_the_old_api():
+    # the old free-function API accepted repeated layer specs (event
+    # totals double-count, correctly); only name-keyed lookups reject
+    spec = FCSpec("a", 8, 8)
+    wl = Workload("dup", (spec, spec))
+    program = compile_program(wl)
+    one = compile_program(Workload("one", (spec,)))
+    assert program.event_totals["pe_macs"] == 2 * one.event_totals["pe_macs"]
+    with pytest.raises(KeyError, match="ambiguous"):
+        program.layer_program("a")
+    with pytest.warns(DeprecationWarning):
+        ev = events_for_layers([spec, spec])
+    assert ev.pe_macs == program.event_totals["pe_macs"]
+
+
+def test_compile_program_is_cached_and_keyed_on_arch():
+    wl = vgg11_cifar()
+    p = compile_program(wl)
+    assert isinstance(p, CompiledProgram)
+    assert compile_program(wl) is p                      # memoized
+    assert compile_program(list(wl)) is p                # layer-list spelling
+    assert compile_program(wl, ArchSpec()) is p          # equal arch, same line
+    wide = compile_program(wl, DEFAULT_ARCH.replace(n_c=512, n_m=512))
+    assert wide is not p and wide.n_tiles < p.n_tiles
+
+
+def test_block_partition_covers_channels_exactly():
+    arch = DEFAULT_ARCH.replace(n_c=7, n_m=5)
+    layer = ConvSpec("c", 3, 20, 13, 8, 8)
+    lp = compile_program(Workload("t", (layer,)), arch).layer_programs[0]
+    assert (lp.c_blocks, lp.m_blocks) == (3, 3)
+    assert lp.n_blocks == 9 and len(lp.blocks) == 9
+    # each M-chain's C-ranges tile [0, c_in) exactly; M-ranges tile [0, c_out)
+    for mi in range(lp.m_blocks):
+        chain = [lp.block(ci, mi) for ci in range(lp.c_blocks)]
+        assert [b.c_range for b in chain] == [(0, 7), (7, 14), (14, 20)]
+        assert all(b.m_range == chain[0].m_range for b in chain)
+        assert chain[-1].is_last_c and not chain[0].is_last_c
+        # only the chain-closing block carries the M-type activation role
+        assert "mtype_last" in chain[-1].roles
+        assert all("mtype_last" not in b.roles for b in chain[:-1])
+    assert sorted(b.m_range for b in lp.blocks[:3]) == [(0, 5), (5, 10), (10, 13)]
+    # block tiles sum to the layer's allocation
+    assert sum(b.n_tiles for b in lp.blocks) == lp.alloc.n_tiles
+    # every role a block names exists in the compiled schedule dict
+    for b in lp.blocks:
+        assert all(r in lp.schedules for r in b.roles)
+
+
+def test_program_events_sum_to_totals():
+    wl = vgg11_cifar()
+    p = compile_program(wl)
+    for f in EVENT_FIELDS:
+        assert sum(lp.events[f] for lp in p.layer_programs) == p.event_totals[f]
+    assert p.event_totals == network_event_totals(wl.layers)
+
+
+def test_wide_layer_schedules_compile_within_table_capacity():
+    # ImageNet-wide rows (p = 2(P+W) = 450 > 128) compress to the 2-periodic
+    # steady-state loop; instruction content at any cycle is unchanged
+    wide = next(l for l in vgg16_imagenet() if isinstance(l, ConvSpec))
+    scheds = layer_schedules(wide)
+    k0 = scheds["k0"].table
+    assert len(k0.words) <= 128
+    narrow = ConvSpec("n", 3, 8, 8, 8, 8)
+    ref = layer_schedules(narrow)["k0"].table
+    assert ref.period == conv_period(narrow)  # small layers keep full tables
+    for c in range(8):
+        assert k0.at_cycle(c) == k0.at_cycle(c + 2)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: warn AND stay bitwise-identical
+# ---------------------------------------------------------------------------
+
+
+def test_map_network_shim_warns_and_is_bitwise_identical():
+    wl = vgg11_cifar()
+    program = compile_program(wl)
+    with pytest.warns(DeprecationWarning, match="map_network"):
+        allocs = map_network(list(wl))
+    assert tuple(allocs) == program.allocs  # same frozen TileAlloc objects
+    assert all(a is b for a, b in zip(allocs, program.allocs))
+    # the silent cached accessor is a view into the same program
+    assert map_network_cached(wl) is program.allocs
+
+
+def test_compile_layer_shim_warns_and_is_bitwise_identical():
+    layer = ConvSpec("shim", 3, 16, 16, 10, 10)
+    with pytest.warns(DeprecationWarning, match="compile_layer"):
+        scheds = compile_layer(layer)
+    program = compile_program(Workload("one", (layer,)))
+    assert scheds is program.layer_programs[0].schedules
+    assert scheds is layer_schedules(layer)
+    assert set(scheds) == {f"k{i}" for i in range(9)} | {"mtype_last"}
+
+
+def test_events_for_layers_shim_warns_and_is_bitwise_identical():
+    wl = vgg11_cifar()
+    with pytest.warns(DeprecationWarning, match="events_for_layers"):
+        ev = events_for_layers(list(wl))
+    program = compile_program(wl)
+    for f in EVENT_FIELDS:
+        assert getattr(ev, f) == program.event_totals[f]
+
+
+def test_default_arch_tab_iv_identical_through_every_entry_spelling():
+    """DominoModel via CompiledProgram == via Workload == via layer list —
+    the Tab. IV contract the sweep oracle and table_iv bands pin down."""
+    wl = vgg11_cifar()
+    through_program = DominoModel(compile_program(wl)).evaluate(0.05, n_chips=5)
+    through_workload = DominoModel(wl).evaluate(0.05, n_chips=5)
+    through_list = DominoModel(list(wl)).evaluate(0.05, n_chips=5)
+    assert through_program == through_workload == through_list  # bitwise
+
+
+# ---------------------------------------------------------------------------
+# multi-block COMGridSim correctness (the ROADMAP item this PR closes)
+# ---------------------------------------------------------------------------
+
+
+def test_multiblock_conv_matches_reference_and_closed_forms():
+    rng = np.random.default_rng(7)
+    for trial in range(8):
+        n_c, n_m = int(rng.integers(2, 6)), int(rng.integers(2, 6))
+        arch = DEFAULT_ARCH.replace(n_c=n_c, n_m=n_m)
+        k = int(rng.choice([1, 3]))
+        c = int(rng.integers(n_c + 1, 3 * n_c + 1))   # force C > N_C
+        m = int(rng.integers(n_m + 1, 3 * n_m + 1))   # force M > N_M
+        h = w = int(rng.integers(max(k, 4), 9))
+        s = int(rng.choice([1, 2]))
+        layer = ConvSpec(f"mb{trial}", k, c, m, h, w, stride=s, padding=1)
+        wts = rng.normal(size=(k, k, c, m))
+        x = rng.normal(size=(h, w, c))
+        sim = COMGridSim(layer, wts, arch)
+        assert sim.lp.c_blocks > 1 and sim.lp.m_blocks > 1
+        np.testing.assert_allclose(
+            sim.run(x), reference_conv(x, wts, layer), atol=1e-6)
+        _assert_sim_events_match_closed_forms(sim, layer, arch)
+
+
+def test_multiblock_fc_matches_numpy_and_closed_forms():
+    rng = np.random.default_rng(11)
+    for trial in range(8):
+        n_c, n_m = int(rng.integers(2, 8)), int(rng.integers(2, 8))
+        arch = DEFAULT_ARCH.replace(n_c=n_c, n_m=n_m)
+        c = int(rng.integers(n_c + 1, 4 * n_c + 1))
+        m = int(rng.integers(n_m + 1, 4 * n_m + 1))
+        layer = FCSpec(f"fc{trial}", c, m)
+        wts = rng.normal(size=(c, m))
+        x = rng.normal(size=(c,))
+        sim = COMGridSim(layer, wts, arch)
+        assert sim.lp.c_blocks > 1 and sim.lp.m_blocks > 1
+        np.testing.assert_allclose(sim.run(x), reference_fc(x, wts), atol=1e-6)
+        _assert_sim_events_match_closed_forms(sim, layer, arch)
+
+
+def test_oy_chunked_execution_is_invariant(monkeypatch):
+    # big feature maps gather the MAC operand in bounded oy chunks; the
+    # outputs and event counts must not depend on the chunk size
+    import repro.core.simulator as simmod
+
+    rng = np.random.default_rng(5)
+    arch = DEFAULT_ARCH.replace(n_c=8, n_m=8)
+    layer = ConvSpec("chunked", 3, 12, 10, 9, 9)
+    wts = rng.normal(size=(3, 3, 12, 10))
+    x = rng.normal(size=(9, 9, 12))
+    whole = COMGridSim(layer, wts, arch)
+    y_whole = whole.run(x)
+    monkeypatch.setattr(simmod, "_CONV_CHUNK_BYTES", 1.0)  # force 1-row chunks
+    chunked = COMGridSim(layer, wts, arch)
+    y_chunked = chunked.run(x)
+    np.testing.assert_allclose(y_chunked, y_whole, atol=1e-12)
+    assert chunked.ev == whole.ev
+    _assert_sim_events_match_closed_forms(chunked, layer, arch)
+
+
+def test_single_block_path_unchanged_by_block_chain():
+    # cb = mb = 1 at DEFAULT_ARCH: the chain degenerates to the old walk
+    rng = np.random.default_rng(3)
+    layer = ConvSpec("sb", 3, 8, 16, 10, 10)
+    wts = rng.normal(size=(3, 3, 8, 16))
+    x = rng.normal(size=(10, 10, 8))
+    sim = COMGridSim(layer, wts)
+    assert (sim.lp.c_blocks, sim.lp.m_blocks) == (1, 1)
+    np.testing.assert_allclose(sim.run(x), reference_conv(x, wts, layer),
+                               rtol=1e-10, atol=1e-10)
+    _assert_sim_events_match_closed_forms(sim, layer, DEFAULT_ARCH)
+
+
+def test_vgg16_c512_layer_executes_via_program_block_chain():
+    """Acceptance: a genuine VGG-16 layer with C > N_C runs through the
+    full-network CompiledProgram's block chain, matches reference_conv to
+    1e-6, and its event counts equal network_event_totals."""
+    wl = vgg16_imagenet()
+    program = compile_program(wl)
+    layer = next(l for l in wl
+                 if isinstance(l, ConvSpec) and l.c_in == 512 and l.pool_k == 0)
+    lp = program.layer_program(layer.name)
+    assert layer.c_in > DEFAULT_ARCH.n_c         # 512 > 256: 2-block C-chain
+    assert (lp.c_blocks, lp.m_blocks) == (2, 2)
+    rng = np.random.default_rng(0)
+    wts = rng.normal(size=(3, 3, 512, 512))
+    x = rng.normal(size=(layer.h_in, layer.w_in, 512))
+    sim = COMGridSim.from_program(program, layer.name, wts)
+    np.testing.assert_allclose(sim.run(x), reference_conv(x, wts, layer),
+                               atol=1e-6)
+    _assert_sim_events_match_closed_forms(sim, layer, DEFAULT_ARCH)
+
+
+def test_layer_schedules_resolve_lazily_and_identically():
+    # schedules are a lazy view over the memoized layer_schedules cache:
+    # repeated access returns the same dict, shared with the direct call
+    layer = ConvSpec("lazy", 3, 8, 8, 6, 6)
+    lp = compile_program(Workload("one", (layer,))).layer_programs[0]
+    assert lp.schedules is lp.schedules
+    assert lp.schedules is layer_schedules(layer, DEFAULT_ARCH)
+
+
+def test_conflicting_arch_alongside_program_is_rejected():
+    wl = vgg11_cifar()
+    program = compile_program(wl)  # DEFAULT_ARCH
+    other = DEFAULT_ARCH.replace(n_c=128)
+    with pytest.raises(ValueError, match="conflicting architectures"):
+        DominoModel(program, arch=other)
+    assert DominoModel(program, arch=DEFAULT_ARCH).arch == DEFAULT_ARCH
+    layer = ConvSpec("c", 3, 8, 16, 10, 10)
+    one = compile_program(Workload("one", (layer,)))
+    with pytest.raises(ValueError, match="conflicting architectures"):
+        COMGridSim(layer, np.zeros((3, 3, 8, 16)), other, program=one)
+
+
+def test_comgridsim_rejects_bad_weights_and_unknown_layers():
+    layer = ConvSpec("c", 3, 8, 16, 10, 10)
+    with pytest.raises(ValueError, match="weights shape"):
+        COMGridSim(layer, np.zeros((3, 3, 8, 8)))
+    program = compile_program(vgg11_cifar())
+    with pytest.raises(KeyError, match="no layer"):
+        program.layer_program("nope")
+    with pytest.raises(KeyError, match="not in the program"):
+        COMGridSim(layer, np.zeros((3, 3, 8, 16)), program=program)
+
+
+# ---------------------------------------------------------------------------
+# steady_cycles_per_image: multi-block chains deepen the pipeline fill
+# ---------------------------------------------------------------------------
+
+
+def test_steady_cycles_accounts_for_multiblock_chains():
+    layer = ConvSpec("c", 3, 512, 512, 28, 28)
+    single, per_single = steady_cycles_per_image(
+        [layer], DEFAULT_ARCH.replace(n_c=512))
+    multi, per_multi = steady_cycles_per_image([layer], DEFAULT_ARCH)
+    # C=512 over n_c=256 is a 2-deep block chain: one period per chained
+    # group; the steady-state rate (bottleneck pixels) is unchanged
+    assert per_single[layer.name] == conv_period(layer)
+    assert per_multi[layer.name] == 2 * conv_period(layer)
+    assert multi - single == conv_period(layer)
+    # accepts Workload and CompiledProgram spellings (program arch wins)
+    wl = Workload("one", (layer,))
+    assert steady_cycles_per_image(wl) == steady_cycles_per_image([layer])
+    program = compile_program(wl, DEFAULT_ARCH.replace(n_c=128))
+    deeper, per_deeper = steady_cycles_per_image(program)
+    assert per_deeper[layer.name] == 4 * conv_period(layer)
+
+
+def test_steady_cycles_fc_depth_matches_fc_rows():
+    fc = FCSpec("f", 4096, 4096)
+    total, per = steady_cycles_per_image([fc])
+    assert per[fc.name] == 16  # ceil(4096/256) systolic rows

@@ -8,7 +8,8 @@ except ModuleNotFoundError:  # stripped container: deterministic fallback
     from _hypothesis_stub import given, settings, st
 
 from repro.core.energy import COUNTERPARTS, PAPER_DOMINO
-from repro.core.mapping import NETWORKS, ConvSpec, FCSpec, map_network, tiles_for, total_chips
+from repro.core.mapping import NETWORKS, ConvSpec, FCSpec, tiles_for, total_chips
+from repro.core.program import compile_program
 from repro.core.simulator import (
     COMGridSim,
     DominoModel,
@@ -82,10 +83,10 @@ def test_tile_allocation_formula():
 
 def test_network_mapping_chips():
     for name, make in NETWORKS.items():
-        allocs = map_network(make())
-        chips = total_chips(allocs)
+        program = compile_program(make())
+        chips = total_chips(list(program.allocs))
         assert chips >= 1
-        assert sum(a.n_tiles for a in allocs) > 0
+        assert program.n_tiles > 0
 
 
 @pytest.mark.parametrize("key", list(COUNTERPARTS))

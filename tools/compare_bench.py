@@ -1,0 +1,190 @@
+"""Benchmark-artifact regression differ (the non-blocking CI compare step).
+
+Diffs a freshly produced sweep (`benchmarks/sweep.py`) or serve
+(`benchmarks/serve_bench.py`) JSON artifact against a committed baseline
+in ``benchmarks/baselines/`` and emits a GitHub-flavored markdown table —
+pipe it into ``$GITHUB_STEP_SUMMARY`` to surface drift on every run
+(ROADMAP: "compare per-backend engine_wall_s and Tab. IV columns across
+commits to catch perf and model-fidelity regressions").
+
+Two metric classes, different contracts:
+
+* **fidelity** — model outputs (Tab. IV column aggregates, occupancy,
+  decode-steps-per-token, token counts). These are deterministic; any
+  relative drift beyond ``--fidelity-rtol`` (default 1e-9) is flagged as a
+  REGRESSION.
+* **perf** — wall-clock metrics (``engine_wall_s``, ``tokens_s``). Noisy
+  across runners; drift beyond ``--perf-rtol`` (default 0.5, i.e. ±50%)
+  is flagged as DRIFT, informationally.
+
+Exit code is 0 unless ``--strict`` is given (then fidelity regressions
+fail the step). Dependency-free.
+
+    python tools/compare_bench.py sweep-results.json \
+        --baseline benchmarks/baselines/sweep-results.json
+    python tools/compare_bench.py serve-bench.json \
+        --baseline benchmarks/baselines/serve-bench.json --strict
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Dict, List, Optional, Tuple
+
+# (metric-path, class) extractors per artifact kind. A path is a dot-joined
+# key chain into the JSON payload; "rows:<col>:mean" aggregates a Tab. IV
+# column over the sweep's row view.
+SWEEP_METRICS: List[Tuple[str, str]] = [
+    ("n_scenarios", "fidelity"),
+    ("check_max_rel_err", "fidelity"),
+    ("rows:img_s:mean", "fidelity"),
+    ("rows:power_w:mean", "fidelity"),
+    ("rows:ce_tops_w:mean", "fidelity"),
+    ("rows:ce_tops_w:max", "fidelity"),
+    ("rows:thr_tops_mm2:mean", "fidelity"),
+    ("rows:area_mm2:mean", "fidelity"),
+    ("rows:exec_us:mean", "fidelity"),
+    ("backends.numpy.engine_wall_s", "perf"),
+    ("backends.jax.engine_wall_s", "perf"),
+]
+SERVE_METRICS: List[Tuple[str, str]] = [
+    ("generated_tokens", "fidelity"),
+    ("decode_steps", "fidelity"),
+    ("occupancy", "fidelity"),
+    ("decode_steps_per_token", "fidelity"),
+    ("matches_sequential", "fidelity"),
+    ("tokens_s", "perf"),
+    ("wall_s", "perf"),
+]
+
+
+def detect_kind(payload: Dict) -> str:
+    if "columns" in payload or "backends" in payload:
+        return "sweep"
+    if "tokens_s" in payload:
+        return "serve"
+    raise SystemExit("compare_bench: unrecognized artifact (neither sweep nor serve)")
+
+
+def extract(payload: Dict, path: str) -> Optional[float]:
+    """Resolve a metric path; None when absent (e.g. a backend not run)."""
+    if path.startswith("rows:"):
+        _, col, agg = path.split(":")
+        rows = payload.get("rows")
+        if not rows:
+            return None
+        vals = [float(r[col]) for r in rows if col in r]
+        if not vals:
+            return None
+        return {"mean": sum(vals) / len(vals), "max": max(vals),
+                "min": min(vals)}[agg]
+    node = payload
+    for key in path.split("."):
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    if isinstance(node, bool):
+        return 1.0 if node else 0.0
+    return float(node)
+
+
+def rel_delta(base: float, cur: float, atol: float = 1e-12) -> float:
+    """Relative drift with an absolute floor: near-zero baselines (e.g. a
+    committed ``check_max_rel_err`` of exactly 0.0) must not turn an
+    epsilon of cross-runner float noise into an astronomical ratio."""
+    if abs(cur - base) <= atol:
+        return 0.0
+    return (cur - base) / max(abs(base), abs(cur), atol)
+
+
+def compare(baseline: Dict, current: Dict, fidelity_rtol: float,
+            perf_rtol: float, atol: float = 1e-12) -> Tuple[List[Dict], int]:
+    kind = detect_kind(current)
+    metrics = SWEEP_METRICS if kind == "sweep" else SERVE_METRICS
+    rows: List[Dict] = []
+    regressions = 0
+    for path, cls in metrics:
+        base, cur = extract(baseline, path), extract(current, path)
+        if base is None and cur is None:
+            continue
+        if base is None or cur is None:
+            rows.append(dict(metric=path, cls=cls, base=base, cur=cur,
+                             delta=math.nan, status="missing"))
+            continue
+        d = rel_delta(base, cur, atol)
+        tol = fidelity_rtol if cls == "fidelity" else perf_rtol
+        if abs(d) <= tol:
+            status = "ok"
+        elif cls == "fidelity":
+            status = "REGRESSION"
+            regressions += 1
+        else:
+            status = "drift"
+        rows.append(dict(metric=path, cls=cls, base=base, cur=cur,
+                         delta=d, status=status))
+    return rows, regressions
+
+
+def fmt(v: Optional[float]) -> str:
+    if v is None:
+        return "—"
+    if math.isnan(v):
+        return "nan"
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.6g}"
+
+
+def render_markdown(label: str, rows: List[Dict], regressions: int) -> str:
+    icon = {"ok": "✅", "drift": "📈", "REGRESSION": "❌", "missing": "⚠️"}
+    out = [f"### {label}: baseline comparison",
+           "",
+           "| metric | class | baseline | current | Δ | status |",
+           "| --- | --- | ---: | ---: | ---: | --- |"]
+    for r in rows:
+        delta = "—" if math.isnan(r["delta"]) else f"{r['delta']:+.2%}"
+        out.append(
+            f"| `{r['metric']}` | {r['cls']} | {fmt(r['base'])} | "
+            f"{fmt(r['cur'])} | {delta} | {icon[r['status']]} {r['status']} |"
+        )
+    verdict = (f"**{regressions} fidelity regression(s)**" if regressions
+               else "no fidelity regressions")
+    out += ["", f"{verdict} vs committed baseline.", ""]
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="freshly produced artifact JSON")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline JSON (benchmarks/baselines/...)")
+    ap.add_argument("--label", default=None,
+                    help="heading label (default: artifact kind)")
+    ap.add_argument("--fidelity-rtol", type=float, default=1e-9,
+                    help="relative tolerance for model-fidelity metrics")
+    ap.add_argument("--perf-rtol", type=float, default=0.5,
+                    help="relative tolerance for wall-clock metrics")
+    ap.add_argument("--atol", type=float, default=1e-12,
+                    help="absolute floor below which drift is ignored")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on fidelity regressions (default: report only)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    rows, regressions = compare(baseline, current, args.fidelity_rtol,
+                                args.perf_rtol, args.atol)
+    label = args.label or detect_kind(current)
+    print(render_markdown(label, rows, regressions))
+    if regressions:
+        print(f"compare_bench: {regressions} fidelity regression(s) in "
+              f"{args.current} vs {args.baseline}", file=sys.stderr)
+    return 1 if (args.strict and regressions) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
