@@ -61,6 +61,28 @@ def perf_grid() -> SweepGrid:
     )
 
 
+def smoke_1e6_grid() -> SweepGrid:
+    """>=1e6 scenarios: the perf grid with a dense CIM-energy axis.
+
+    The chunked-execution smoke case (``--smoke-1e6``): forces
+    ``chunk_size`` so the engine never materializes the full stacked
+    batch. CI keeps the small/perf grids; run this locally or nightly::
+
+        PYTHONPATH=src python benchmarks/sweep.py --smoke-1e6 \\
+            --chunk-size 65536 --out sweep-smoke-1e6.json
+    """
+    return SweepGrid(
+        networks=tuple(NETWORKS),
+        chip_counts=(1, 2, 4, 5, 8, 10, 20, 40),
+        precisions=(8, 16),
+        e_mac_pj=tuple(round(0.01 * (1.05 ** i), 10) for i in range(290)),
+        tiles_per_chip=(180, 240, 300),
+        n_c=(128, 256, 512),
+        n_m=(128, 256, 512),
+        node_nm=(45.0, 22.0),
+    )
+
+
 def check_against_scalar(result, rtol: float = 1e-9) -> float:
     """Max relative error of the batched engine vs the scalar oracle."""
     worst = 0.0
@@ -115,6 +137,14 @@ def main(argv=None) -> int:
                     default="numpy", help="evaluation backend(s) to run")
     ap.add_argument("--perf", action="store_true",
                     help="use the >=1e5-scenario ArchSpec-axes perf grid")
+    ap.add_argument("--smoke-1e6", action="store_true",
+                    help="use the >=1e6-scenario chunked-execution smoke "
+                         "grid (implies --no-check; chunk_size defaults to "
+                         "65536)")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="evaluate in bounded-memory chunks of this many "
+                         "scenarios (records peak_chunk_bytes in the "
+                         "artifact)")
     ap.add_argument("--repeats", type=int, default=3,
                     help="timing repetitions per backend (best-of; warms "
                          "summary caches and the JAX jit)")
@@ -124,7 +154,13 @@ def main(argv=None) -> int:
                     help="skip the per-scenario scalar cross-check")
     args = ap.parse_args(argv)
 
-    base = perf_grid() if args.perf else default_grid()
+    if args.smoke_1e6:
+        base = smoke_1e6_grid()
+        args.no_check = True       # 1e6 scalar oracle walks are pointless
+        if args.chunk_size is None:
+            args.chunk_size = 65536
+    else:
+        base = perf_grid() if args.perf else default_grid()
     try:
         grid = SweepGrid(
             networks=tuple(args.networks) if args.networks else base.networks,
@@ -146,7 +182,7 @@ def main(argv=None) -> int:
     for backend in backends:
         best = None
         for _ in range(max(args.repeats, 1)):
-            r = run_sweep(grid, backend=backend)
+            r = run_sweep(grid, backend=backend, chunk_size=args.chunk_size)
             if best is None or r.engine_wall_s < best.engine_wall_s:
                 best = r
         results[backend] = best

@@ -1,6 +1,8 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from typing import Dict
+
 from repro.core.arch import DEFAULT_ARCH, ArchSpec, EnergyTable
 from repro.core.program import (
     CompiledProgram,
@@ -18,5 +20,34 @@ __all__ = [
     "LayerBlock",
     "LayerProgram",
     "Workload",
+    "cache_stats",
     "compile_program",
 ]
+
+
+def cache_stats() -> Dict[str, "object"]:
+    """``functools.CacheInfo`` for every bounded LRU cache of the
+    evaluation stack, keyed by a stable name.
+
+    All compile/summary caches carry explicit ``maxsize`` bounds so long
+    sweeps over many ``(workload, arch)`` pairs cannot grow memory without
+    limit; this helper is the one place to watch their hit rates and
+    occupancy (e.g. from a sweep driver or a memory investigation).
+    """
+    from repro.core.program import _compile_program
+    from repro.core.schedule import _layer_schedules
+    from repro.core.simulator import _network_event_totals, layer_table
+
+    stats = {
+        "compile_program": _compile_program.cache_info(),
+        "layer_schedules": _layer_schedules.cache_info(),
+        "layer_table": layer_table.cache_info(),
+        "network_event_totals": _network_event_totals.cache_info(),
+    }
+    # the sweep engine's summary cache, when that package is loaded
+    import sys
+
+    engine = sys.modules.get("repro.sweep.engine")
+    if engine is not None:
+        stats["network_summary"] = engine._network_summary.cache_info()
+    return stats

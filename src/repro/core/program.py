@@ -185,6 +185,25 @@ class CompiledProgram:
             )
         return matches[0]
 
+    def executor(self, weights, *, backend: str = "numpy", **kwargs):
+        """A :class:`~repro.core.executor.ProgramExecutor` over this
+        program: runs the whole layer chain image→logits, batched over a
+        leading image axis, on the ``"numpy"`` oracle or the ``"jax"``
+        backend (block einsums lowered to the Pallas ``com_matmul``
+        kernel). Keyword arguments pass through (``interpret``,
+        ``block_m``/``block_n``/``block_k``)."""
+        from repro.core.executor import ProgramExecutor
+
+        return ProgramExecutor(self, weights, backend=backend, **kwargs)
+
+    def execute(self, images, weights, *, backend: str = "numpy", **kwargs):
+        """One-shot whole-program run: build an executor and run the batch.
+        Returns an :class:`~repro.core.executor.ExecutionResult` (outputs +
+        per-image event totals + timing). For repeated runs build the
+        executor once via :meth:`executor` (the jax backend caches its
+        jitted chain there)."""
+        return self.executor(weights, backend=backend, **kwargs).run(images)
+
 
 def _blocks_for(layer: LayerSpec, arch: ArchSpec) -> Tuple[int, int, Tuple[LayerBlock, ...]]:
     """The explicit block grid of one layer: channel ranges + schedule roles."""
@@ -213,7 +232,12 @@ def _blocks_for(layer: LayerSpec, arch: ArchSpec) -> Tuple[int, int, Tuple[Layer
     return cb, mb, tuple(blocks)
 
 
-@lru_cache(maxsize=None)
+# Bounded: long sweeps touch many (workload, arch) pairs; an unbounded
+# cache of CompiledPrograms (each holding block grids for every layer)
+# would grow memory without limit. 256 comfortably covers the Tab. IV
+# networks x the perf grid's architecture axes; evictions only cost a
+# recompile. Introspect via repro.core.cache_stats().
+@lru_cache(maxsize=256)
 def _compile_program(workload: Workload, arch: ArchSpec) -> CompiledProgram:
     layers = workload.layers
     allocs = tuple(greedy_place(list(layers), arch))

@@ -147,7 +147,10 @@ def layer_schedules(layer, arch: ArchSpec = DEFAULT_ARCH) -> Dict[str, TileSched
     return _layer_schedules(layer, arch)
 
 
-@lru_cache(maxsize=None)
+# Bounded (see repro.core.cache_stats): one entry per distinct (layer,
+# arch) pair; 4096 covers every layer of every Tab. IV network across the
+# perf grid's architecture axes with room to spare.
+@lru_cache(maxsize=4096)
 def _layer_schedules(layer, arch: ArchSpec) -> Dict[str, TileSchedule]:
     out: Dict[str, TileSchedule] = {}
     if isinstance(layer, ConvSpec):

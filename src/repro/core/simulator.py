@@ -73,6 +73,148 @@ LINK_PJ_PER_BIT = DEFAULT_ARCH.energy.link_pj_per_bit  # NoC pJ per bit-hop
 _CONV_CHUNK_BYTES = 32e6
 
 
+def run_conv_block_chain(lp, w: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Execute one conv layer's compiled block chain, batched over a leading
+    image axis: ``(B, H, W, C) -> (B, H_out, W_out, M)`` float64.
+
+    This is THE block-chain semantics — partial sums accumulate across
+    chained C-blocks, outputs concatenate across M-blocks, the last C-block
+    activates — shared by ``COMGridSim`` (B=1 cycle-level cross-validation)
+    and ``repro.core.executor.ProgramExecutor`` (whole-program batched
+    runs). Each block evaluates as one full-image einsum vectorized over
+    the ``oy`` axis; the gather is chunked over ``oy`` to bound the MAC
+    operand grid (``_CONV_CHUNK_BYTES``) — results are chunking-invariant.
+    """
+    L = lp.layer
+    K, P, S = L.k, L.padding, L.stride
+    B, H, W, C = x.shape
+    Ho, Wo, M = L.h_out, L.w_out, L.c_out
+    xp = np.pad(x.astype(np.float64), ((0, 0), (P, P), (P, P), (0, 0)))
+    out = np.empty((B, Ho, Wo, M))
+    # gather indices: patches[b, oy, kr, ox, kc, c] is the MAC operand
+    # grid — the oy loop of the per-row walk, vectorized. The gather
+    # copies K² slices of the padded IFM, so chunk the oy axis to keep
+    # the operand bounded (~32 MB) on big feature maps (224² inputs
+    # would otherwise materialize a >200 MB grid at once).
+    row_idx = np.arange(Ho)[:, None] * S + np.arange(K)[None, :]
+    col_idx = np.arange(Wo)[:, None] * S + np.arange(K)[None, :]
+    bytes_per_row = B * K * Wo * K * C * 8
+    chunk = max(1, min(Ho, int(_CONV_CHUNK_BYTES // max(bytes_per_row, 1))))
+    for y0 in range(0, Ho, chunk):
+        patches = xp[:, row_idx[y0:y0 + chunk, :, None, None],
+                     col_idx[None, None, :, :], :]
+        for mi in range(lp.m_blocks):
+            acc = None
+            for ci in range(lp.c_blocks):
+                blk = lp.block(ci, mi)
+                (cs, ce), (ms, me) = blk.c_range, blk.m_range
+                # this block's K² chain: PE MACs + kernel-row psum
+                # chain (E) + group-sum chain (S), a row-chunk at once
+                part = np.einsum(
+                    "byrxkc,rkcm->byxm",
+                    patches[..., cs:ce], w[:, :, cs:ce, ms:me],
+                )
+                acc = part if acc is None else acc + part
+            # chain closed: the last C-block's M-type tile activates
+            out[:, y0:y0 + chunk, :, ms:me] = np.maximum(acc, 0.0)
+    return out
+
+
+def conv_block_events(lp, arch: ArchSpec) -> Events:
+    """Per-image event counts of one conv layer's block-chain execution.
+
+    Recounted from the explicit block grid (NOT copied from the closed
+    forms), uniform over the grid — a CIM array fires whole rows/cols, so
+    ragged last blocks hold zeros — exactly the ``batched_layer_events``
+    convention, independent of execution chunking or batch size.
+    """
+    L = lp.layer
+    K, P = L.k, L.padding
+    Ho, W = L.h_out, L.w_in
+    px = Ho * L.w_out
+    m_bits = min(L.c_out, arch.n_m) * 8
+    c_bits = min(L.c_in, arch.n_c) * 8
+    ev = Events()
+    for mi in range(lp.m_blocks):
+        for ci in range(lp.c_blocks):
+            chain_adds = px * (K * K + K - 1)
+            ev.pe_macs += px * K * K
+            ev.adds += chain_adds
+            ev.ps_hops += chain_adds
+            ev.ps_bits += chain_adds * m_bits
+            # row end: every kernel row queues one group-sum
+            # (WR_BUF/PUSH) popped by the S-direction combine
+            ev.buf_push += px * K
+            ev.buf_pop += px * K
+            if ci > 0:
+                # cross-block handoff: the chained C-block receives the
+                # previous block's partial sum (ADD_RX) per output px
+                ev.ps_hops += px
+                ev.ps_bits += px * m_bits
+                ev.adds += px
+        ev.act += px
+        if L.pool_k > 0:
+            # fused pooling: the M-type CMP chain compares every window
+            # value once per pooled output (energy-model event)
+            ev.pool_cmp += (px // max(L.pool_stride ** 2, 1)) * L.pool_k ** 2
+    # IFM streaming: each input row segment visits one C-block's K²
+    # chain once per output row (in-buffer shift gives K-row reuse);
+    # M-blocks of the same C-slice share the stream
+    ev.ifm_hops += lp.c_blocks * Ho * K * K * (W + 2 * P)
+    ev.ifm_bits += lp.c_blocks * Ho * K * K * (W + 2 * P) * c_bits
+    # every output row is one schedule period p = 2(P+W); the block
+    # grid pipelines in parallel planes and does not slow the stream
+    ev.cycles += Ho * conv_period(L)
+    return ev
+
+
+def run_fc_block_chain(lp, w: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Execute one FC layer's systolic block columns, batched over a leading
+    image axis: ``(B, C_in) -> (B, C_out)`` float64.
+
+    Each M-block is a column of chained C-block rows, each row adding its
+    MVM slice to the arriving sum (ADD_RX | ADD_PE) and forwarding S; the
+    last row activates (M-type ACT). Shared by ``COMGridSim`` and
+    ``ProgramExecutor`` — see :func:`run_conv_block_chain`.
+    """
+    L = lp.layer
+    x = x.astype(np.float64)
+    out = np.empty((x.shape[0], L.c_out))
+    for mi in range(lp.m_blocks):
+        acc = None
+        for ci in range(lp.c_blocks):
+            blk = lp.block(ci, mi)
+            (cs, ce), (ms, me) = blk.c_range, blk.m_range
+            part = x[:, cs:ce] @ w[cs:ce, ms:me]
+            acc = part if acc is None else acc + part
+        (ms, me) = lp.block(0, mi).m_range
+        out[:, ms:me] = np.maximum(acc, 0.0)
+    return out
+
+
+def fc_block_events(lp, arch: ArchSpec) -> Events:
+    """Per-image event counts of one FC layer's systolic column execution
+    (recounted from the block grid; see :func:`conv_block_events`)."""
+    L = lp.layer
+    m_bits = min(L.c_out, arch.n_m) * 8
+    c_bits = min(L.c_in, arch.n_c) * 8
+    ev = Events()
+    for _mi in range(lp.m_blocks):
+        for ci in range(lp.c_blocks):
+            ev.pe_macs += 1       # one MVM vector op per block
+            ev.ifm_hops += 1      # IFM slice into this row
+            ev.ifm_bits += c_bits
+            if ci > 0:            # arriving column sum (ADD_RX)
+                ev.ps_hops += 1
+                ev.ps_bits += m_bits
+                ev.adds += 1
+        ev.act += 1
+        ev.ps_hops += 1           # column egress hop
+        ev.ps_bits += m_bits
+    ev.cycles += lp.c_blocks + 2  # fill + egress of the column
+    return ev
+
+
 @dataclass
 class Events:
     ps_hops: int = 0          # partial/group-sum tile-to-tile transfers
@@ -111,9 +253,17 @@ class COMGridSim:
     cross-validate ``reference_conv`` on real VGG-scale layers (e.g. the
     C=512 convs of VGG-16) instead of toy single-block shapes.
 
-    Pooling fused onto a conv layer (``pool_k > 0``) is an energy-model
-    event (``pool_cmp``), not part of the functional output — the sim
-    returns the pre-pool activation, as before.
+    Pooling fused onto a conv layer (``pool_k > 0``) is counted as an
+    energy-model event (``pool_cmp``, the M-type CMP chain) but is not part
+    of the functional output — the sim returns the pre-pool activation, as
+    before. ``repro.core.executor.ProgramExecutor`` applies the pooling
+    functionally when chaining layers image→logits.
+
+    The block-chain semantics themselves live in the module-level helpers
+    (:func:`run_conv_block_chain` / :func:`run_fc_block_chain` and their
+    event counters), batched over a leading image axis and shared with the
+    whole-program executor — this class is the single-image, single-layer
+    cycle-level view of the same code path.
     """
 
     def __init__(self, layer, weights: np.ndarray,
@@ -167,106 +317,18 @@ class COMGridSim:
         return self._run_fc(ifm)
 
     def _run_conv(self, ifm: np.ndarray) -> np.ndarray:
-        L, lp = self.layer, self.lp
-        K, P, S = L.k, L.padding, L.stride
-        H, W, C = ifm.shape
-        Ho, Wo, M = L.h_out, L.w_out, L.c_out
-        x = np.pad(ifm.astype(np.float64), ((P, P), (P, P), (0, 0)))
-        out = np.empty((Ho, Wo, M))
-        px = Ho * Wo
-        m_bits = min(M, self.arch.n_m) * 8
-        c_bits = min(C, self.arch.n_c) * 8
-        # gather indices: patches[oy, kr, ox, kc, c] is the MAC operand
-        # grid — the oy loop of the per-row walk, vectorized. The gather
-        # copies K² slices of the padded IFM, so chunk the oy axis to keep
-        # the operand bounded (~32 MB) on big feature maps (224² inputs
-        # would otherwise materialize a >200 MB grid at once).
-        row_idx = np.arange(Ho)[:, None] * S + np.arange(K)[None, :]
-        col_idx = np.arange(Wo)[:, None] * S + np.arange(K)[None, :]
-        bytes_per_row = K * Wo * K * C * 8
-        chunk = max(1, min(Ho, int(_CONV_CHUNK_BYTES // max(bytes_per_row, 1))))
-        for y0 in range(0, Ho, chunk):
-            patches = x[row_idx[y0:y0 + chunk, :, None, None],
-                        col_idx[None, None, :, :], :]
-            for mi in range(lp.m_blocks):
-                acc = None
-                for ci in range(lp.c_blocks):
-                    blk = lp.block(ci, mi)
-                    (cs, ce), (ms, me) = blk.c_range, blk.m_range
-                    # this block's K² chain: PE MACs + kernel-row psum
-                    # chain (E) + group-sum chain (S), a row-chunk at once
-                    part = np.einsum(
-                        "yrxkc,rkcm->yxm",
-                        patches[..., cs:ce], self.w[:, :, cs:ce, ms:me],
-                    )
-                    acc = part if acc is None else acc + part
-                # chain closed: the last C-block's M-type tile activates
-                out[y0:y0 + chunk, :, ms:me] = np.maximum(acc, 0.0)
-
-        # per-block events, uniform over the block grid (a CIM array fires
-        # whole rows/cols; ragged last blocks hold zeros) — exactly the
-        # closed forms' convention, independent of the execution chunking
-        for mi in range(lp.m_blocks):
-            for ci in range(lp.c_blocks):
-                chain_adds = px * (K * K + K - 1)
-                self.ev.pe_macs += px * K * K
-                self.ev.adds += chain_adds
-                self.ev.ps_hops += chain_adds
-                self.ev.ps_bits += chain_adds * m_bits
-                # row end: every kernel row queues one group-sum
-                # (WR_BUF/PUSH) popped by the S-direction combine
-                self.ev.buf_push += px * K
-                self.ev.buf_pop += px * K
-                if ci > 0:
-                    # cross-block handoff: the chained C-block receives the
-                    # previous block's partial sum (ADD_RX) per output px
-                    self.ev.ps_hops += px
-                    self.ev.ps_bits += px * m_bits
-                    self.ev.adds += px
-            self.ev.act += px
-        # IFM streaming: each input row segment visits one C-block's K²
-        # chain once per output row (in-buffer shift gives K-row reuse);
-        # M-blocks of the same C-slice share the stream
-        self.ev.ifm_hops += lp.c_blocks * Ho * K * K * (W + 2 * P)
-        self.ev.ifm_bits += lp.c_blocks * Ho * K * K * (W + 2 * P) * c_bits
-        # every output row is one schedule period p = 2(P+W); the block
-        # grid pipelines in parallel planes and does not slow the stream
-        self.ev.cycles += Ho * conv_period(L)
+        out = run_conv_block_chain(self.lp, self.w, ifm[None])[0]
+        self.ev.merge(conv_block_events(self.lp, self.arch))
         # the bounded ROFM queues hold at most one group-sum per kernel
         # row: each output step pushes K and pops K
-        self.max_queue_depth = 1 if (Ho > 0 and Wo > 0) else 0
+        L = self.layer
+        self.max_queue_depth = 1 if (L.h_out > 0 and L.w_out > 0) else 0
         return out
 
     def _run_fc(self, x: np.ndarray) -> np.ndarray:
-        """FC systolic columns: each M-block is a column of chained C-block
-        rows, each row adding its MVM slice to the arriving sum (ADD_RX |
-        ADD_PE) and forwarding S; the last row activates (M-type ACT)."""
-        L, lp = self.layer, self.lp
-        assert x.shape == (L.c_in,)
-        x = x.astype(np.float64)
-        out = np.empty(L.c_out)
-        m_bits = min(L.c_out, self.arch.n_m) * 8
-        c_bits = min(L.c_in, self.arch.n_c) * 8
-        for mi in range(lp.m_blocks):
-            acc = None
-            for ci in range(lp.c_blocks):
-                blk = lp.block(ci, mi)
-                (cs, ce), (ms, me) = blk.c_range, blk.m_range
-                part = x[cs:ce] @ self.w[cs:ce, ms:me]
-                acc = part if acc is None else acc + part
-                self.ev.pe_macs += 1       # one MVM vector op per block
-                self.ev.ifm_hops += 1      # IFM slice into this row
-                self.ev.ifm_bits += c_bits
-                if ci > 0:                 # arriving column sum (ADD_RX)
-                    self.ev.ps_hops += 1
-                    self.ev.ps_bits += m_bits
-                    self.ev.adds += 1
-            (ms, me) = lp.block(0, mi).m_range
-            out[ms:me] = np.maximum(acc, 0.0)
-            self.ev.act += 1
-            self.ev.ps_hops += 1           # column egress hop
-            self.ev.ps_bits += m_bits
-        self.ev.cycles += lp.c_blocks + 2  # fill + egress of the column
+        assert x.shape == (self.layer.c_in,)
+        out = run_fc_block_chain(self.lp, self.w, x[None])[0]
+        self.ev.merge(fc_block_events(self.lp, self.arch))
         self.max_queue_depth = 0
         return out
 
@@ -323,7 +385,7 @@ class LayerTable:
         return int(self.is_conv.shape[0])
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=1024)
 def layer_table(layers: Tuple) -> LayerTable:
     """Build (and cache, keyed by the frozen layer specs) the feature table."""
     def col(conv_val, fc_val):
@@ -388,7 +450,8 @@ def batched_layer_events(t: LayerTable, arch: ArchSpec = DEFAULT_ARCH) -> Dict[s
     return ev
 
 
-@lru_cache(maxsize=None)
+# Bounded like the compile cache (repro.core.cache_stats introspects both)
+@lru_cache(maxsize=4096)
 def _network_event_totals(layers: Tuple, arch: ArchSpec) -> Dict[str, int]:
     per_layer = batched_layer_events(layer_table(layers), arch)
     return {f: int(per_layer[f].sum()) for f in EVENT_FIELDS}
@@ -585,6 +648,19 @@ class DominoModel:
         per_copy = self.arch.fdm_factor * self.arch.step_hz / self.bottleneck_px()
         return per_copy * self.copies(n_chips) * self.arch.pipeline_eff \
             * self.skip_stall()
+
+    # ---- optional functional cross-check ----
+    def functional_forward(self, images, weights, *, backend: str = "numpy",
+                           **kwargs):
+        """Run the model's compiled program image→logits through the
+        whole-program executor (``repro.core.executor``) — an optional
+        functional cross-check beside the analytic Tab. IV path. Returns
+        the :class:`~repro.core.executor.ExecutionResult`; its per-image
+        ``events`` equal this model's ``program.event_totals``."""
+        from repro.core.executor import ProgramExecutor
+
+        return ProgramExecutor(
+            self.program, weights, backend=backend, **kwargs).run(images)
 
     # ---- energy ----
     def events(self) -> Events:

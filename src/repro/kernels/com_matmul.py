@@ -114,3 +114,46 @@ def com_matmul(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(*args)
+
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def com_matmul_padded(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    bias: Optional[jnp.ndarray] = None,
+    activation: Optional[str] = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """:func:`com_matmul` for arbitrary (unaligned) shapes.
+
+    Zero-pads every dimension up to the next block multiple, runs the
+    kernel, and slices the result back to ``(M, N)``. Zero K-padding adds
+    zeros into the VMEM partial-sum accumulation (exact); padded M rows /
+    N cols are sliced away before the caller sees them, so the epilogue
+    applied to them is irrelevant. This is what lets the whole-program
+    executor lower every compiled ``LayerBlock`` einsum — whose shapes
+    follow the DNN, not the MXU — onto the one COM kernel.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    Mp, Kp, Np = _round_up(M, block_m), _round_up(K, block_k), _round_up(N, block_n)
+    xp = jnp.pad(x, ((0, Mp - M), (0, Kp - K))) if (Mp, Kp) != (M, K) else x
+    wp = jnp.pad(w, ((0, Kp - K), (0, Np - N))) if (Kp, Np) != (K, N) else w
+    bp = None
+    if bias is not None:
+        assert bias.shape == (N,)
+        bp = jnp.pad(bias, (0, Np - N)) if Np != N else bias
+    out = com_matmul(
+        xp, wp, bias=bp, activation=activation,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )
+    return out[:M, :N] if (Mp, Np) != (M, N) else out

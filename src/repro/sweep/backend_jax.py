@@ -34,52 +34,26 @@ from jax.experimental import enable_x64
 from repro.sweep.engine import COLUMNS, ScenarioBatch, register_backend
 
 
-@partial(jax.jit, static_argnames=("shape",))
-def _columns_kernel(
-    shape: Tuple[int, ...],
-    chips: jax.Array, bits: jax.Array, e_mac: jax.Array, tpc: jax.Array,
-    summary: Dict[str, jax.Array],
-    fdm_factor: jax.Array, step_hz: jax.Array, pipeline_eff: jax.Array,
-) -> Dict[str, jax.Array]:
-    """All Tab. IV columns over the full grid, fused into one executable.
+def _column_exprs(chips, bits, e_mac, tpc, sm, fdm_factor, step_hz,
+                  pipeline_eff) -> Dict[str, jax.Array]:
+    """The Tab. IV column math on broadcast-compatible views — mirrors
+    ``numpy_backend`` expression-for-expression. ``sm`` maps summary field
+    names to views; shared by the full-grid and chunked (flat) kernels."""
+    n_tiles = sm["n_tiles"]
+    onchip_j = sm["onchip_j"]
+    ops = sm["ops"]
+    area = sm["area_mm2"]
 
-    Mirrors ``numpy_backend`` expression-for-expression; the grid ``shape``
-    is static so XLA sees concrete broadcast shapes.
-    """
-    def ax(v, axis):
-        shp = [1] * len(shape)
-        shp[axis] = v.shape[0]
-        return v.reshape(shp)
-
-    def sm(field):
-        return summary[field].reshape(
-            shape[0], 1, 1, 1, shape[4], shape[5], shape[6], shape[7]
-        )
-
-    chips = ax(chips, 1)
-    bits = ax(bits, 2)
-    e_mac = ax(e_mac, 3)
-    tpc = ax(tpc, 4)
-    n_tiles = sm("n_tiles")
-    exec_us = sm("exec_us")
-    onchip_j = sm("onchip_j")
-    offchip_values = sm("offchip_values")
-    ops = sm("ops")
-    bottleneck_px = sm("bottleneck_px")
-    skip_stall = sm("skip_stall")
-    area = sm("area_mm2")
-    offchip_pj_per_bit = sm("offchip_pj_per_bit")
-
-    per_copy = fdm_factor * step_hz / bottleneck_px
+    per_copy = fdm_factor * step_hz / sm["bottleneck_px"]
     copies = jnp.maximum(1.0, (chips * tpc) / n_tiles)
-    img_s = per_copy * copies * pipeline_eff * skip_stall
+    img_s = per_copy * copies * pipeline_eff * sm["skip_stall"]
 
-    e_off = offchip_values * bits * offchip_pj_per_bit * 1e-12
+    e_off = sm["offchip_values"] * bits * sm["offchip_pj_per_bit"] * 1e-12
     e_cim = ops * e_mac * 1e-12
     e_total = onchip_j + e_off + e_cim
 
-    cols = dict(
-        exec_us=exec_us,
+    return dict(
+        exec_us=sm["exec_us"],
         img_s=img_s,
         power_w=e_total * img_s,
         onchip_w=onchip_j * img_s,
@@ -93,19 +67,75 @@ def _columns_kernel(
         n_chips=chips,
         n_tiles=n_tiles,
     )
+
+
+@partial(jax.jit, static_argnames=("shape",))
+def _columns_kernel(
+    shape: Tuple[int, ...],
+    chips: jax.Array, bits: jax.Array, e_mac: jax.Array, tpc: jax.Array,
+    summary: Dict[str, jax.Array],
+    fdm_factor: jax.Array, step_hz: jax.Array, pipeline_eff: jax.Array,
+) -> Dict[str, jax.Array]:
+    """All Tab. IV columns over the full grid, fused into one executable.
+
+    The grid ``shape`` is static so XLA sees concrete broadcast shapes.
+    """
+    def ax(v, axis):
+        shp = [1] * len(shape)
+        shp[axis] = v.shape[0]
+        return v.reshape(shp)
+
+    sm = {
+        f: summary[f].reshape(
+            shape[0], 1, 1, 1, shape[4], shape[5], shape[6], shape[7]
+        )
+        for f in summary
+    }
+    cols = _column_exprs(
+        ax(chips, 1), ax(bits, 2), ax(e_mac, 3), ax(tpc, 4), sm,
+        fdm_factor, step_hz, pipeline_eff,
+    )
     return {c: jnp.broadcast_to(v, shape).reshape(-1) for c, v in cols.items()}
+
+
+@jax.jit
+def _columns_kernel_flat(
+    chips: jax.Array, bits: jax.Array, e_mac: jax.Array, tpc: jax.Array,
+    summary: Dict[str, jax.Array],
+    fdm_factor: jax.Array, step_hz: jax.Array, pipeline_eff: jax.Array,
+) -> Dict[str, jax.Array]:
+    """The same column math over pre-gathered per-scenario ``(n,)`` views —
+    the chunked (``ScenarioBatch.sel``) evaluation path."""
+    cols = _column_exprs(chips, bits, e_mac, tpc, summary,
+                         fdm_factor, step_hz, pipeline_eff)
+    return {c: jnp.broadcast_to(v, chips.shape) for c, v in cols.items()}
 
 
 def jax_backend(batch: ScenarioBatch) -> Dict[str, np.ndarray]:
     """Evaluate a :class:`ScenarioBatch` on the jitted kernel (float64)."""
     with enable_x64():
         f64 = lambda a: jnp.asarray(a, dtype=jnp.float64)  # noqa: E731
-        out = _columns_kernel(
-            batch.shape,
-            f64(batch.chips), f64(batch.bits), f64(batch.e_mac), f64(batch.tpc),
-            {f: f64(a) for f, a in batch.summary.items()},
-            f64(batch.fdm_factor), f64(batch.step_hz), f64(batch.pipeline_eff),
-        )
+        if batch.sel is not None:
+            # chunked mode: the batch's views gather the selected rows on
+            # host; the kernel sees flat (chunk,) arrays only
+            out = _columns_kernel_flat(
+                f64(batch.axis_view(batch.chips, 1)),
+                f64(batch.axis_view(batch.bits, 2)),
+                f64(batch.axis_view(batch.e_mac, 3)),
+                f64(batch.axis_view(batch.tpc, 4)),
+                {f: f64(batch.summary_view(f)) for f in batch.summary},
+                f64(batch.fdm_factor), f64(batch.step_hz),
+                f64(batch.pipeline_eff),
+            )
+        else:
+            out = _columns_kernel(
+                batch.shape,
+                f64(batch.chips), f64(batch.bits), f64(batch.e_mac),
+                f64(batch.tpc),
+                {f: f64(a) for f, a in batch.summary.items()},
+                f64(batch.fdm_factor), f64(batch.step_hz),
+                f64(batch.pipeline_eff),
+            )
         return {c: np.asarray(out[c], dtype=np.float64) for c in COLUMNS}
 
 

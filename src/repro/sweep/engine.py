@@ -23,6 +23,8 @@ order.
 """
 from __future__ import annotations
 
+import dataclasses
+import operator
 import time
 from dataclasses import dataclass
 from functools import lru_cache
@@ -69,7 +71,11 @@ class NetworkSummary:
     offchip_pj_per_bit: float  # inter-chip pJ/bit at the arch's node corner
 
 
-@lru_cache(maxsize=None)
+# Bounded: sweeps replace the arch per scenario combo, so an unbounded
+# cache grows with every distinct (network, arch) pair ever swept. 4096
+# summaries (tiny frozen rows) cover far more combos than any one grid;
+# evictions cost one re-read of the (separately cached) compiled program.
+@lru_cache(maxsize=4096)
 def _network_summary(name: str, arch: ArchSpec) -> NetworkSummary:
     # one compile per (workload, arch): the summary reads the program's
     # placement/block/event artifacts instead of re-deriving mappings
@@ -112,6 +118,14 @@ class ScenarioBatch:
     grid, evaluate the column closed forms elementwise, and return
     row-major ``(n_scenarios,)`` columns — scenario ordering is fixed by
     ``SweepGrid.scenarios()`` and shared by every backend.
+
+    **Chunked evaluation**: when ``sel`` carries a vector of flat scenario
+    indices, the views gather per-scenario values of just those rows
+    instead of broadcasting the full grid — ``axis_view``/``summary_view``
+    return ``(len(sel),)`` arrays and ``out_shape`` is ``(len(sel),)``.
+    ``run_sweep(grid, chunk_size=...)`` evaluates 1e6+-scenario grids in
+    such bounded-memory chunks without ever materializing the full stacked
+    batch.
     """
 
     shape: Tuple[int, ...]
@@ -123,6 +137,7 @@ class ScenarioBatch:
     fdm_factor: float
     step_hz: float
     pipeline_eff: float
+    sel: Optional[np.ndarray] = None  # flat scenario indices (chunked mode)
 
     @property
     def n_scenarios(self) -> int:
@@ -131,14 +146,37 @@ class ScenarioBatch:
             n *= d
         return n
 
+    @property
+    def out_shape(self) -> Tuple[int, ...]:
+        """Shape backends broadcast their columns to before flattening:
+        the full grid, or ``(len(sel),)`` in chunked mode."""
+        if self.sel is not None:
+            return (int(self.sel.shape[0]),)
+        return self.shape
+
+    def _sel_indices(self) -> Tuple[np.ndarray, ...]:
+        """Per-axis index vectors of the selected flat scenarios (cached)."""
+        cached = getattr(self, "_sel_idx", None)
+        if cached is None:
+            cached = np.unravel_index(self.sel, self.shape)
+            object.__setattr__(self, "_sel_idx", cached)
+        return cached
+
     def axis_view(self, values: np.ndarray, axis: int) -> np.ndarray:
-        """A per-axis value array reshaped for broadcast over ``shape``."""
+        """A per-axis value array reshaped for broadcast over ``shape``
+        (or gathered per selected scenario in chunked mode)."""
+        if self.sel is not None:
+            return values[self._sel_indices()[axis]]
         shp = [1] * len(self.shape)
         shp[axis] = len(values)
         return values.reshape(shp)
 
     def summary_view(self, field: str) -> np.ndarray:
-        """A summary array reshaped for broadcast over ``shape``."""
+        """A summary array reshaped for broadcast over ``shape``
+        (or gathered per selected scenario in chunked mode)."""
+        if self.sel is not None:
+            i = self._sel_indices()
+            return self.summary[field][i[0], i[4], i[5], i[6], i[7]]
         l = self.shape
         return self.summary[field].reshape(
             l[0], 1, 1, 1, l[4], l[5], l[6], l[7]
@@ -230,7 +268,7 @@ def numpy_backend(batch: ScenarioBatch) -> Dict[str, np.ndarray]:
         n_chips=chips,
         n_tiles=n_tiles,
     )
-    shape = batch.shape
+    shape = batch.out_shape
     return {
         c: np.ascontiguousarray(np.broadcast_to(v, shape)).reshape(-1)
         for c, v in cols.items()
@@ -274,11 +312,15 @@ class SweepResult:
 
     def __init__(self, grid: SweepGrid, columns: Dict[str, np.ndarray],
                  engine_wall_s: float, backend: str = "numpy",
-                 scenarios: Optional[List[Scenario]] = None):
+                 scenarios: Optional[List[Scenario]] = None,
+                 chunk_size: Optional[int] = None,
+                 peak_chunk_bytes: Optional[int] = None):
         self.grid = grid
         self.columns = columns
         self.engine_wall_s = engine_wall_s
         self.backend = backend
+        self.chunk_size = chunk_size
+        self.peak_chunk_bytes = peak_chunk_bytes
         self._scenarios = scenarios
 
     @property
@@ -310,26 +352,72 @@ class SweepResult:
             backend=self.backend,
             columns=list(COLUMNS),
         )
+        if self.chunk_size is not None:
+            out["chunk_size"] = self.chunk_size
+            out["peak_chunk_bytes"] = self.peak_chunk_bytes
         if include_rows:
             out["rows"] = self.rows()
         return out
 
 
 def run_sweep(grid: SweepGrid, backend: str = "numpy",
-              arch: ArchSpec = DEFAULT_ARCH) -> SweepResult:
+              arch: ArchSpec = DEFAULT_ARCH,
+              chunk_size: Optional[int] = None) -> SweepResult:
     """Evaluate every scenario of a validated grid on the chosen backend.
 
     ``arch`` is the base architecture template; the grid's architecture
     axes (``tiles_per_chip``, ``n_c``, ``n_m``, ``node_nm``) are
     substituted into it per scenario.
+
+    ``chunk_size`` switches to bounded-memory chunked evaluation: the
+    backend sees ``ceil(n/chunk_size)`` gathered ``(chunk,)`` batches
+    instead of one full-grid broadcast, so 1e6+-scenario grids run without
+    materializing the full stacked batch (column results are bitwise
+    chunking-invariant for the NumPy oracle). The result records the
+    chunking and ``peak_chunk_bytes`` — the accounted per-chunk array
+    bytes (index vectors + gathered views + column chunks; backends'
+    elementwise temporaries scale with the same chunk length but are not
+    counted), which is what bounds with the chunk instead of the grid.
     """
     fn = _resolve_backend(backend)
+    if chunk_size is not None:
+        # validate up front, before the (expensive) batch build; accept
+        # any integral type (incl. NumPy ints), reject bools and floats
+        try:
+            if isinstance(chunk_size, bool):
+                raise TypeError
+            chunk_size = int(operator.index(chunk_size))
+        except TypeError:
+            raise ValueError(f"chunk_size must be a positive int, got "
+                             f"{chunk_size!r}") from None
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be a positive int, got "
+                             f"{chunk_size!r}")
     t0 = time.perf_counter()
     batch = build_batch(grid, arch)
-    cols = fn(batch)
+    if chunk_size is None:
+        cols = fn(batch)
+        peak = None
+    else:
+        n = grid.n_scenarios
+        cols = {c: np.empty(n, dtype=np.float64) for c in COLUMNS}
+        peak = 0
+        # accounted per-chunk array bytes: the 8 unraveled index vectors,
+        # the 4+|S| gathered per-scenario views, and the |C| column chunks
+        # — all (chunk,) float64/int64. Backend elementwise temporaries
+        # (a small constant factor more) scale with the same chunk length;
+        # nothing scales with the full grid.
+        per_row = 8 * (8 + 4 + len(SUMMARY_FIELDS) + len(COLUMNS))
+        for lo in range(0, n, chunk_size):
+            sel = np.arange(lo, min(lo + chunk_size, n), dtype=np.int64)
+            out = fn(dataclasses.replace(batch, sel=sel))
+            hi = lo + sel.shape[0]
+            for c in COLUMNS:
+                cols[c][lo:hi] = out[c]
+            peak = max(peak, sel.shape[0] * per_row)
     return SweepResult(
         grid=grid, columns=cols, engine_wall_s=time.perf_counter() - t0,
-        backend=backend,
+        backend=backend, chunk_size=chunk_size, peak_chunk_bytes=peak,
     )
 
 

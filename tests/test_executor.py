@@ -1,0 +1,217 @@
+"""Whole-program batched executor (repro.core.executor).
+
+Covers the ISSUE-5 acceptance surface: (a) image→logits VGG-11 equals the
+composed reference pipeline (reference_conv + max-pool + flatten +
+reference_fc) on BOTH backends; (b) numpy-vs-jax agreement on randomized
+multi-block programs (C > n_c and M > n_m forced); (c) batched (B>1)
+equals stacked B=1 runs; (d) a program run's per-image event totals equal
+the ``network_event_totals`` closed forms — including the fused-pooling
+``pool_cmp`` events the executor chains through functionally.
+"""
+import numpy as np
+import pytest
+
+from repro.core import cache_stats, compile_program
+from repro.core.executor import (
+    ProgramExecutor,
+    _maxpool_np,
+    random_weights,
+)
+from repro.core.mapping import ConvSpec, FCSpec, resnet18_cifar, vgg11_cifar
+from repro.core.program import Workload
+from repro.core.simulator import (
+    COMGridSim,
+    DominoModel,
+    EVENT_FIELDS,
+    network_event_totals,
+    reference_conv,
+    reference_fc,
+)
+
+
+def reference_forward(layers, weights, images):
+    """The composed reference pipeline: per-image reference_conv / max-pool
+    / flatten / reference_fc — independent of the executor's block walk."""
+    x = np.asarray(images, dtype=np.float64)
+    for l in layers:
+        if isinstance(l, ConvSpec):
+            y = np.stack([reference_conv(xi, weights[l.name], l) for xi in x])
+            if l.pool_k > 0:
+                y = _maxpool_np(y, l.pool_k, l.pool_stride)
+            x = y
+        else:
+            if x.ndim > 2:
+                x = x.reshape(len(x), -1)
+            x = np.stack([reference_fc(xi, weights[l.name]) for xi in x])
+    return x
+
+
+def _small_multiblock_workload():
+    """conv(pool)→conv→flatten→FC→FC with C > n_c and M > n_m at the
+    reduced 8x8 arch geometry — every block-chain shape in one chain."""
+    layers = (
+        ConvSpec("c0", 3, 3, 12, 8, 8, pool_k=2),     # -> (4, 4, 12)
+        ConvSpec("c1", 3, 12, 10, 4, 4),              # -> (4, 4, 10)
+        FCSpec("f0", 160, 20),
+        FCSpec("f1", 20, 5),
+    )
+    return Workload("mb-exec", layers)
+
+
+SMALL_ARCH_KW = dict(n_c=8, n_m=8)
+
+
+@pytest.fixture(scope="module")
+def vgg11_setup():
+    wl = vgg11_cifar()
+    program = compile_program(wl)
+    weights = random_weights(program, seed=1)
+    rng = np.random.default_rng(0)
+    images = rng.normal(size=(2, 32, 32, 3))
+    ref = reference_forward(wl.layers, weights, images)
+    return wl, program, weights, images, ref
+
+
+def test_vgg11_numpy_matches_composed_reference(vgg11_setup):
+    wl, program, weights, images, ref = vgg11_setup
+    res = program.execute(images, weights, backend="numpy")
+    assert res.outputs.shape == (2, 10)
+    np.testing.assert_allclose(res.outputs, ref, rtol=1e-9, atol=1e-12)
+
+
+def test_vgg11_jax_kernel_matches_composed_reference(vgg11_setup):
+    wl, program, weights, images, ref = vgg11_setup
+    # interpret=True: the real Pallas com_matmul path on CPU CI
+    res = program.execute(images, weights, backend="jax", interpret=True)
+    scale = np.abs(ref).max()
+    np.testing.assert_allclose(res.outputs, ref, atol=2e-5 * scale)
+    assert {f: res.events[f] for f in EVENT_FIELDS} == dict(
+        network_event_totals(wl.layers, program.arch))
+
+
+def test_vgg11_program_run_events_equal_network_totals(vgg11_setup):
+    wl, program, weights, images, _ = vgg11_setup
+    res = program.execute(images, weights)
+    totals = network_event_totals(wl.layers, program.arch)
+    assert {f: res.events[f] for f in EVENT_FIELDS} == dict(totals)
+    # pool_cmp is genuinely exercised: VGG-11 fuses five pooling stages
+    assert res.events["pool_cmp"] > 0
+    # and the program's own closed-form totals agree
+    assert dict(program.event_totals) == {
+        f: res.events[f] for f in EVENT_FIELDS}
+
+
+def test_batched_equals_stacked_single_image_runs(vgg11_setup):
+    wl, program, weights, images, _ = vgg11_setup
+    ex = program.executor(weights)
+    batched = ex.run(images).outputs
+    stacked = np.concatenate([ex.run(images[i]).outputs
+                              for i in range(len(images))])
+    np.testing.assert_allclose(batched, stacked, rtol=0, atol=1e-12)
+
+
+def test_randomized_multiblock_numpy_vs_jax_agree():
+    from repro.core.arch import DEFAULT_ARCH
+
+    rng = np.random.default_rng(42)
+    wl = _small_multiblock_workload()
+    arch = DEFAULT_ARCH.replace(**SMALL_ARCH_KW)
+    program = compile_program(wl, arch)
+    # the reduced geometry forces real multi-block chains
+    lps = program.layer_programs
+    assert any(lp.c_blocks > 1 for lp in lps)
+    assert any(lp.m_blocks > 1 for lp in lps)
+    for trial in range(3):
+        weights = random_weights(program, seed=100 + trial)
+        images = rng.normal(size=(3, 8, 8, 3))
+        ref = reference_forward(wl.layers, weights, images)
+        rn = program.execute(images, weights, backend="numpy")
+        rj = program.execute(images, weights, backend="jax", interpret=True)
+        np.testing.assert_allclose(rn.outputs, ref, rtol=1e-9, atol=1e-12)
+        scale = max(np.abs(ref).max(), 1e-30)
+        np.testing.assert_allclose(rj.outputs, rn.outputs,
+                                   atol=2e-5 * scale)
+        assert {f: rn.events[f] for f in EVENT_FIELDS} == dict(
+            network_event_totals(wl.layers, arch))
+
+
+def test_executor_matches_comgridsim_per_layer():
+    # the shared block-semantics helpers ARE COMGridSim's execution path:
+    # a single-conv program through the executor equals the cycle sim
+    from repro.core.arch import DEFAULT_ARCH
+
+    rng = np.random.default_rng(9)
+    layer = ConvSpec("solo", 3, 12, 10, 6, 6)
+    arch = DEFAULT_ARCH.replace(**SMALL_ARCH_KW)
+    program = compile_program(Workload("solo", (layer,)), arch)
+    w = rng.normal(size=(3, 3, 12, 10))
+    x = rng.normal(size=(6, 6, 12))
+    sim = COMGridSim.from_program(program, "solo", w)
+    got = program.execute(x[None], {"solo": w}).outputs
+    np.testing.assert_allclose(got[0], sim.run(x), rtol=0, atol=0)
+
+
+def test_fc_only_program_and_single_image_convenience():
+    wl = Workload("fcs", (FCSpec("a", 12, 7), FCSpec("b", 7, 3)))
+    program = compile_program(wl)
+    weights = random_weights(program, seed=3)
+    x = np.random.default_rng(1).normal(size=(12,))
+    res = program.execute(x, weights)      # unbatched convenience input
+    assert res.outputs.shape == (1, 3)
+    ref = reference_fc(reference_fc(x, weights["a"]), weights["b"])
+    np.testing.assert_allclose(res.outputs[0], ref, rtol=1e-12)
+
+
+def test_domino_model_functional_forward_cross_check(vgg11_setup):
+    wl, program, weights, images, ref = vgg11_setup
+    model = DominoModel(program)
+    res = model.functional_forward(images, weights)
+    np.testing.assert_allclose(res.outputs, ref, rtol=1e-9, atol=1e-12)
+    assert {f: res.events[f] for f in EVENT_FIELDS} == dict(
+        model.program.event_totals)
+
+
+def test_executor_validates_weights_and_inputs(vgg11_setup):
+    wl, program, weights, images, _ = vgg11_setup
+    bad = dict(weights)
+    del bad[wl[0].name]
+    with pytest.raises(KeyError, match="missing"):
+        program.executor(bad)
+    bad = dict(weights)
+    bad[wl[0].name] = np.zeros((3, 3, 3, 7))
+    with pytest.raises(ValueError, match="weights shape"):
+        program.executor(bad)
+    ex = program.executor(weights)
+    with pytest.raises(ValueError, match="images shape"):
+        ex.run(np.zeros((2, 16, 16, 3)))
+    with pytest.raises(ValueError, match="unknown executor backend"):
+        program.executor(weights, backend="torch")
+    with pytest.raises(ValueError, match="weight arrays for"):
+        program.executor([weights[wl[0].name]])
+
+
+def test_non_chaining_workload_rejected():
+    wl = Workload("broken", (
+        ConvSpec("c0", 3, 3, 8, 8, 8),
+        ConvSpec("c1", 3, 9, 8, 8, 8),   # c_in 9 != produced 8 channels
+    ))
+    program = compile_program(wl)
+    with pytest.raises(ValueError, match="not an executable"):
+        program.executor(random_weights(wl))
+
+
+def test_residual_workloads_are_rejected_for_now():
+    program = compile_program(resnet18_cifar())
+    with pytest.raises(NotImplementedError, match="residual"):
+        program.executor(random_weights(program))
+
+
+def test_cache_stats_reports_bounded_caches():
+    compile_program(vgg11_cifar())           # ensure at least one entry
+    stats = cache_stats()
+    for name in ("compile_program", "layer_schedules", "layer_table",
+                 "network_event_totals"):
+        info = stats[name]
+        assert info.maxsize is not None      # every cache is bounded
+        assert info.currsize <= info.maxsize
+    assert stats["compile_program"].currsize >= 1

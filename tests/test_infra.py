@@ -344,3 +344,41 @@ def test_compare_bench_sweep_rows_aggregates_and_strict_exit():
         assert cb.main([pc, "--baseline", pb, "--strict"]) == 1
         json.dump(same, open(pc, "w"))
         assert cb.main([pc, "--baseline", pb, "--strict"]) == 0
+
+
+def test_compare_bench_executor_kind_and_history_append():
+    cb = _load_compare_bench()
+    mk = lambda img_s: dict(  # noqa: E731
+        network="vgg11-cifar", n_layers=11, events_match=True,
+        jax_max_rel_err_vs_numpy=1e-6, interpret=True,
+        backends=["numpy", "jax"],
+        batches={"1": dict(numpy_img_s=8.0),
+                 "32": dict(numpy_img_s=10.0, numpy_per_image_img_s=6.0,
+                            jax_img_s=img_s,
+                            jax_vs_per_image_speedup=img_s / 6.0)},
+    )
+    base, cur = mk(14.0), mk(12.0)
+    assert cb.detect_kind(cur) == "executor"  # despite the "backends" key
+    rows, regressions = cb.compare(base, cur, 1e-9, 0.5)
+    assert regressions == 0                   # img/s drift is perf-class
+    by = {r["metric"]: r for r in rows}
+    assert by["events_match"]["status"] == "ok"
+    assert by["batches.32.jax_img_s"]["cur"] == 12.0
+    # a flipped event check IS a fidelity regression
+    bad = dict(cur, events_match=False)
+    assert cb.compare(base, bad, 1e-9, 0.5)[1] == 1
+
+    with tempfile.TemporaryDirectory() as d:
+        pb, pc = os.path.join(d, "b.json"), os.path.join(d, "c.json")
+        hist = os.path.join(d, "bench-history.jsonl")
+        json.dump(base, open(pb, "w")); json.dump(cur, open(pc, "w"))
+        # two runs append two self-contained JSON lines
+        for sha in ("aaa111", "bbb222"):
+            assert cb.main([pc, "--baseline", pb, "--history", hist,
+                            "--sha", sha]) == 0
+        lines = [json.loads(l) for l in open(hist)]
+        assert [l["sha"] for l in lines] == ["aaa111", "bbb222"]
+        for l in lines:
+            assert l["kind"] == "executor" and l["regressions"] == 0
+            assert l["metrics"]["batches.32.jax_img_s"] == 12.0
+            assert "utc" in l

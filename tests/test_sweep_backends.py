@@ -181,3 +181,67 @@ def test_scenarios_are_lazy_and_cached():
     assert r._scenarios is None  # not materialized by the engine
     s = r.scenarios
     assert r.scenarios is s and len(s) == 2
+
+
+# ---------------------------------------------------------------------------
+# chunked (bounded-memory) execution: run_sweep(grid, chunk_size=...)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_grid() -> SweepGrid:
+    return SweepGrid(
+        networks=("vgg11-cifar", "resnet18-cifar"),
+        chip_counts=(5, 10, 20),
+        precisions=(8, 16),
+        e_mac_pj=(0.02, 0.05, 0.1),
+        n_c=(128, 256),
+    )
+
+
+def test_chunked_numpy_is_bitwise_identical_to_full_grid():
+    grid = _chunk_grid()
+    full = run_sweep(grid)
+    for chunk in (1, 7, grid.n_scenarios, grid.n_scenarios + 5):
+        chunked = run_sweep(grid, chunk_size=chunk)
+        for c in COLUMNS:
+            assert np.array_equal(full.columns[c], chunked.columns[c]), (c, chunk)
+        assert chunked.chunk_size == chunk
+        assert chunked.peak_chunk_bytes > 0
+        # bounded: the working set scales with the chunk, not the grid
+        assert (chunked.peak_chunk_bytes
+                <= min(chunk, grid.n_scenarios) * 8 * 64)
+    d = chunked.as_dict()
+    assert d["chunk_size"] == chunked.chunk_size
+    assert d["peak_chunk_bytes"] == chunked.peak_chunk_bytes
+    assert "chunk_size" not in full.as_dict()
+
+
+def test_chunked_jax_matches_numpy_oracle():
+    grid = _chunk_grid()
+    oracle = run_sweep(grid)
+    chunked = run_sweep(grid, backend="jax", chunk_size=11)
+    for c in COLUMNS:
+        assert _rel_err(chunked.columns[c], oracle.columns[c]) < JAX_RTOL, c
+
+
+def test_chunked_batch_views_gather_selected_rows():
+    grid = _chunk_grid()
+    import dataclasses
+
+    batch = build_batch(grid)
+    sel = np.array([0, 5, grid.n_scenarios - 1], dtype=np.int64)
+    cb = dataclasses.replace(batch, sel=sel)
+    assert cb.out_shape == (3,)
+    assert cb.axis_view(cb.chips, 1).shape == (3,)
+    assert cb.summary_view("n_tiles").shape == (3,)
+    # row 0 of the grid is the first value on every axis
+    assert cb.axis_view(cb.chips, 1)[0] == grid.chip_counts[0]
+    # the last flat scenario takes the last value on every axis
+    assert cb.axis_view(cb.bits, 2)[-1] == grid.precisions[-1]
+
+
+def test_chunk_size_validation():
+    grid = SweepGrid(networks=("vgg11-cifar",), chip_counts=(5,))
+    for bad in (0, -3, 2.5, True):
+        with pytest.raises(ValueError, match="chunk_size"):
+            run_sweep(grid, chunk_size=bad)

@@ -1,11 +1,14 @@
 """Benchmark-artifact regression differ (the non-blocking CI compare step).
 
-Diffs a freshly produced sweep (`benchmarks/sweep.py`) or serve
-(`benchmarks/serve_bench.py`) JSON artifact against a committed baseline
-in ``benchmarks/baselines/`` and emits a GitHub-flavored markdown table —
-pipe it into ``$GITHUB_STEP_SUMMARY`` to surface drift on every run
-(ROADMAP: "compare per-backend engine_wall_s and Tab. IV columns across
-commits to catch perf and model-fidelity regressions").
+Diffs a freshly produced sweep (`benchmarks/sweep.py`), serve
+(`benchmarks/serve_bench.py`), or executor (`benchmarks/executor_bench.py`)
+JSON artifact against a committed baseline in ``benchmarks/baselines/`` and
+emits a GitHub-flavored markdown table — pipe it into
+``$GITHUB_STEP_SUMMARY`` to surface drift on every run (ROADMAP: "compare
+per-backend engine_wall_s and Tab. IV columns across commits to catch perf
+and model-fidelity regressions"). ``--history bench-history.jsonl --sha
+$GITHUB_SHA`` additionally appends one JSON line of this run's metric
+values — the cross-commit trend series the dashboard grows from.
 
 Two metric classes, different contracts:
 
@@ -58,14 +61,36 @@ SERVE_METRICS: List[Tuple[str, str]] = [
     ("tokens_s", "perf"),
     ("wall_s", "perf"),
 ]
+# executor artifact (benchmarks/executor_bench.py): event accounting is
+# exact; throughputs — and the f32-kernel-vs-f64-oracle error bound, which
+# floats with XLA fma/reassociation choices across runners — are perf-class
+EXECUTOR_METRICS: List[Tuple[str, str]] = [
+    ("events_match", "fidelity"),
+    ("n_layers", "fidelity"),
+    ("jax_max_rel_err_vs_numpy", "perf"),
+    ("batches.1.numpy_img_s", "perf"),
+    ("batches.32.numpy_img_s", "perf"),
+    ("batches.32.numpy_per_image_img_s", "perf"),
+    ("batches.32.jax_img_s", "perf"),
+    ("batches.32.jax_vs_per_image_speedup", "perf"),
+]
+
+METRICS_BY_KIND: Dict[str, List[Tuple[str, str]]] = {
+    "sweep": SWEEP_METRICS,
+    "serve": SERVE_METRICS,
+    "executor": EXECUTOR_METRICS,
+}
 
 
 def detect_kind(payload: Dict) -> str:
+    if "batches" in payload and "events_match" in payload:
+        return "executor"
     if "columns" in payload or "backends" in payload:
         return "sweep"
     if "tokens_s" in payload:
         return "serve"
-    raise SystemExit("compare_bench: unrecognized artifact (neither sweep nor serve)")
+    raise SystemExit(
+        "compare_bench: unrecognized artifact (not sweep/serve/executor)")
 
 
 def extract(payload: Dict, path: str) -> Optional[float]:
@@ -102,7 +127,7 @@ def rel_delta(base: float, cur: float, atol: float = 1e-12) -> float:
 def compare(baseline: Dict, current: Dict, fidelity_rtol: float,
             perf_rtol: float, atol: float = 1e-12) -> Tuple[List[Dict], int]:
     kind = detect_kind(current)
-    metrics = SWEEP_METRICS if kind == "sweep" else SERVE_METRICS
+    metrics = METRICS_BY_KIND[kind]
     rows: List[Dict] = []
     regressions = 0
     for path, cls in metrics:
@@ -155,6 +180,33 @@ def render_markdown(label: str, rows: List[Dict], regressions: int) -> str:
     return "\n".join(out)
 
 
+def append_history(path: str, label: str, kind: str, rows: List[Dict],
+                   sha: Optional[str] = None) -> Dict:
+    """Append one run's metrics to the ``bench-history.jsonl`` trend file.
+
+    One JSON object per line — commit SHA, UTC timestamp, artifact kind,
+    and the current value of every extracted metric (plus the fidelity
+    regression count vs the committed baseline). Each CI run appends its
+    lines and uploads the file next to the one-shot baseline diff, so a
+    downloaded run history concatenates into a cross-commit trend series
+    (the first dashboard-shaped artifact).
+    """
+    import datetime
+
+    line = dict(
+        sha=sha,
+        utc=datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        label=label,
+        kind=kind,
+        regressions=sum(r["status"] == "REGRESSION" for r in rows),
+        metrics={r["metric"]: r["cur"] for r in rows if r["cur"] is not None},
+    )
+    with open(path, "a") as f:
+        f.write(json.dumps(line) + "\n")
+    return line
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("current", help="freshly produced artifact JSON")
@@ -170,6 +222,13 @@ def main(argv=None) -> int:
                     help="absolute floor below which drift is ignored")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 on fidelity regressions (default: report only)")
+    ap.add_argument("--history", default=None,
+                    help="append this run's metric values as one JSON line "
+                         "to the given .jsonl trend file (the cross-commit "
+                         "bench-history artifact)")
+    ap.add_argument("--sha", default=None,
+                    help="commit SHA recorded in the history line "
+                         "(e.g. $GITHUB_SHA)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -179,6 +238,9 @@ def main(argv=None) -> int:
     rows, regressions = compare(baseline, current, args.fidelity_rtol,
                                 args.perf_rtol, args.atol)
     label = args.label or detect_kind(current)
+    if args.history:
+        append_history(args.history, label, detect_kind(current), rows,
+                       sha=args.sha)
     print(render_markdown(label, rows, regressions))
     if regressions:
         print(f"compare_bench: {regressions} fidelity regression(s) in "
