@@ -9,7 +9,12 @@ Runs :class:`repro.core.executor.ProgramExecutor` over a compiled network
 * ``jax`` — every block einsum lowered to the Pallas ``com_matmul``
   kernel, whole chain jitted; ``interpret=True`` off-TPU so CPU CI
   exercises the real kernel path (noted in the artifact — on-device
-  numbers are the headline, interpret numbers are the CI proxy).
+  numbers are the headline, interpret numbers are the CI proxy);
+* ``jax-sharded`` (``--shard auto``) — the same jitted chain with the
+  image-batch axis partitioned over a ``("data",)`` device mesh
+  (``ProgramExecutor(..., shard="auto")``); logits are checked bitwise
+  against the unsharded jax run (``sharded_matches_jax``) and the device
+  count / shard count land in the artifact.
 
 Cross-checks ride along: jax-vs-numpy output agreement (float32 kernel vs
 float64 oracle) and the per-image event totals against the
@@ -54,6 +59,12 @@ def main(argv=None) -> int:
                     help=f"batch sizes (default: {list(DEFAULT_BATCHES)})")
     ap.add_argument("--backends", nargs="*", default=["numpy", "jax"],
                     choices=("numpy", "jax"), help="backends to time")
+    ap.add_argument("--shard", choices=("off", "auto"), default="off",
+                    help="'auto': additionally time the mesh-sharded jax "
+                         "executor (image-batch axis over a ('data',) "
+                         "mesh) and check its logits bitwise against the "
+                         "unsharded jax run; falls back to unsharded on a "
+                         "single device")
     ap.add_argument("--repeats", type=int, default=2,
                     help="timing repetitions (best-of; first jax run warms "
                          "the jit outside the timed region)")
@@ -77,13 +88,22 @@ def main(argv=None) -> int:
 
         interpret = default_interpret()
 
+    shard = args.shard == "auto" and "jax" in args.backends
     batches = {}
     worst_rel_err = 0.0
+    sharded_matches = True
+    n_shards = 1
+    logits_checksum = None
     for b in args.batches:
         imgs = rng.normal(size=(b,) + oracle.input_shape)
         row = {}
         if "numpy" in args.backends:
             ref = oracle.run(imgs)
+            if b == max(args.batches):
+                # deterministic fidelity fingerprint of the oracle logits
+                # (float64 sums vary only ~1e-13 rel across BLAS builds,
+                # far under the 1e-9 compare_bench fidelity gate)
+                logits_checksum = float(np.abs(ref.outputs).sum())
             wall = _best_of(lambda: oracle.run(imgs), args.repeats)
             row["numpy_wall_s"] = wall
             row["numpy_img_s"] = b / wall
@@ -109,6 +129,18 @@ def main(argv=None) -> int:
                     row["numpy_per_image_wall_s"] / max(wall, 1e-12))
                 row["jax_vs_numpy_speedup"] = (
                     row["numpy_wall_s"] / max(wall, 1e-12))
+            if shard:
+                jsh = ProgramExecutor(program, weights, backend="jax",
+                                      interpret=interpret, shard="auto")
+                n_shards = jsh.n_shards
+                got_sh = jsh.run(imgs)  # warm the jit outside timing
+                wall = _best_of(lambda: jsh.run(imgs), args.repeats)
+                row["jax_sharded_wall_s"] = wall
+                row["jax_sharded_img_s"] = b / wall
+                # sharding splits the batch axis only — no cross-image
+                # math — so logits must match the unsharded jax run bitwise
+                sharded_matches &= bool(np.array_equal(
+                    np.asarray(got_sh.outputs), np.asarray(got.outputs)))
         batches[str(b)] = row
 
     payload = dict(
@@ -131,6 +163,16 @@ def main(argv=None) -> int:
     )
     if "jax" in args.backends and "numpy" in args.backends:
         payload["jax_max_rel_err_vs_numpy"] = worst_rel_err
+    if logits_checksum is not None:
+        payload["logits_checksum"] = logits_checksum
+        payload["logits_checksum_batch"] = max(args.batches)
+    if "jax" in args.backends:
+        import jax
+
+        payload["n_devices"] = len(jax.devices())
+    if shard:
+        payload["n_shards"] = n_shards
+        payload["sharded_matches_jax"] = sharded_matches
 
     top = str(max(args.batches)) if args.batches else None
     head = [f"{args.network}: events_match={events_match}"]
@@ -145,6 +187,10 @@ def main(argv=None) -> int:
                f"per-image loop)" if "jax_vs_per_image_speedup" in batches[top]
                else "")
             + (" [interpret]" if interpret else ""))
+    if top and shard and "jax_sharded_img_s" in batches[top]:
+        head.append(
+            f"jax-sharded {batches[top]['jax_sharded_img_s']:.1f} img/s "
+            f"({n_shards} shards, bitwise=={sharded_matches})")
     print("; ".join(head), file=sys.stderr)
 
     text = json.dumps(payload, indent=2)

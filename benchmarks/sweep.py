@@ -135,6 +135,12 @@ def main(argv=None) -> int:
                     help="ArchSpec axis: technology node nm (default: 45)")
     ap.add_argument("--backend", choices=("numpy", "jax", "both"),
                     default="numpy", help="evaluation backend(s) to run")
+    ap.add_argument("--sharded", action="store_true",
+                    help="additionally run the 'jax-sharded' backend (the "
+                         "scenario axis over a ('data',) device mesh), "
+                         "record its timing + device count, and check it "
+                         "bitwise against the unsharded jax backend on the "
+                         "same chunked evaluation")
     ap.add_argument("--perf", action="store_true",
                     help="use the >=1e5-scenario ArchSpec-axes perf grid")
     ap.add_argument("--smoke-1e6", action="store_true",
@@ -177,6 +183,8 @@ def main(argv=None) -> int:
         ap.error(str(e))
 
     backends = ("numpy", "jax") if args.backend == "both" else (args.backend,)
+    if args.sharded:
+        backends = backends + ("jax-sharded",)
     results = {}
     timings = {}  # backend -> best engine_wall_s (repeats warm caches/jit)
     for backend in backends:
@@ -210,6 +218,25 @@ def main(argv=None) -> int:
             "the old per-scenario engine would have shown. On "
             "accelerator devices the jitted kernel is the scalable path."
         )
+    if any(b.startswith("jax") for b in backends):
+        import jax
+
+        # recorded per run so bench-history can trend the device count
+        payload["n_devices"] = len(jax.devices())
+    if "jax-sharded" in results:
+        sharded = results["jax-sharded"]
+        # bitwise parity holds between sharded and unsharded jax on the
+        # same flat/chunked evaluation (chunk_size=n_scenarios = one full
+        # chunk); the full-grid broadcast kernel may differ by a few ulp —
+        # docs/sweeps.md, "Mesh-sharded sweeps"
+        ref = run_sweep(grid, backend="jax",
+                        chunk_size=args.chunk_size or grid.n_scenarios)
+        payload["sharded_bitwise_equal_jax"] = bool(all(
+            np.array_equal(sharded.columns[c], ref.columns[c])
+            for c in COLUMNS))
+        if "numpy" in results:
+            payload["sharded_max_rel_err_vs_numpy"] = check_backends_agree(
+                results["numpy"], sharded)
     if not args.no_check:
         t1 = time.perf_counter()
         # the NumPy backend is held to the 1e-9 oracle contract; a lone JAX

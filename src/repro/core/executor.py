@@ -158,6 +158,7 @@ class ExecutionResult:
     backend: str
     batch: int
     wall_s: float
+    n_shards: int = 1            # devices the batch axis was sharded over
 
     @property
     def images_s(self) -> float:
@@ -174,6 +175,18 @@ class ProgramExecutor:
     whole chain jitted). ``interpret=None`` auto-selects Pallas interpret
     mode off-TPU so CPU CI exercises the real kernel path.
 
+    ``shard`` turns on the multi-device scale-out mode (jax backend only):
+    the leading image-batch axis is partitioned across a 1-D ``("data",)``
+    mesh via ``shard_map`` — the whole jitted layer chain runs per shard
+    and the logits gather at the end. Batches are zero-padded up to a
+    multiple of the device count and the pad rows sliced off, so any B
+    works. Logits are bitwise-identical to the unsharded jax backend.
+    Accepted values: ``None``/``False`` (off), ``"auto"``/``"data"``/
+    ``True`` (shard across all visible devices, falling back to the
+    single-device path when only one is visible), or an explicit 1-D
+    ``("data",)`` ``jax.sharding.Mesh``. ``n_shards`` reports the
+    resolved device count (1 = fallback or sharding off).
+
     Construct via :meth:`CompiledProgram.executor` or call
     :meth:`CompiledProgram.execute` directly.
     """
@@ -181,7 +194,7 @@ class ProgramExecutor:
     def __init__(self, program, weights, *, backend: str = "numpy",
                  interpret: Optional[bool] = None,
                  block_m: Optional[int] = None, block_n: Optional[int] = None,
-                 block_k: Optional[int] = None):
+                 block_k: Optional[int] = None, shard=None):
         if backend not in BACKENDS:
             raise ValueError(
                 f"unknown executor backend {backend!r}; available: {list(BACKENDS)}")
@@ -194,6 +207,35 @@ class ProgramExecutor:
         self.weights = self._resolve_weights(layers, weights)
         self._events: Optional[Dict[str, int]] = None
         self._jax_forward = None
+        self._mesh = self._resolve_shard(shard, backend)
+
+    @staticmethod
+    def _resolve_shard(shard, backend):
+        """``shard`` → a 1-D ``("data",)`` mesh with >1 device, or None
+        (sharding off / single-device fallback)."""
+        if shard is None or shard is False:
+            return None
+        if backend != "jax":
+            raise ValueError(
+                f"shard={shard!r} requires backend='jax'; the numpy oracle "
+                "is single-device by design")
+        if shard in ("auto", "data", True):
+            from repro.launch.mesh import make_data_mesh
+
+            mesh = make_data_mesh()
+        else:
+            mesh = shard  # an explicit Mesh
+            if "data" not in getattr(mesh, "shape", {}):
+                raise ValueError(
+                    f"shard={shard!r}: expected 'auto', 'data', True, or a "
+                    "1-D ('data',) jax Mesh")
+        # auto-fallback: a 1-device mesh runs the plain unsharded path
+        return mesh if mesh.shape["data"] > 1 else None
+
+    @property
+    def n_shards(self) -> int:
+        """Devices the batch axis is sharded over (1 = unsharded)."""
+        return int(self._mesh.shape["data"]) if self._mesh is not None else 1
 
     @staticmethod
     def _resolve_weights(layers, weights) -> List[np.ndarray]:
@@ -325,9 +367,39 @@ class ProgramExecutor:
                     x = matmul(x, w)
             return x
 
-        jit_forward = jax.jit(forward)
         ws = [jnp.asarray(w, dtype=jnp.float32) for w in self.weights]
-        return lambda x: jit_forward(jnp.asarray(x, dtype=jnp.float32), ws)
+        if self._mesh is None:
+            jit_forward = jax.jit(forward)
+            return lambda x: jit_forward(jnp.asarray(x, dtype=jnp.float32), ws)
+
+        # sharded mode: the whole layer chain runs per batch shard inside
+        # shard_map; logits gather on the ("data",) axis at the end. The
+        # chain has no cross-image math, so per-image results are bitwise
+        # those of the unsharded path.
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core import jax_compat
+        from repro.parallel.sharding import leading_axis_sharding
+
+        mesh = self._mesh
+        n_dev = mesh.shape["data"]
+        jit_forward = jax.jit(jax_compat.shard_map(
+            forward, mesh=mesh, in_specs=(P("data"), P()),
+            out_specs=P("data"),
+        ))
+        in_sharding = leading_axis_sharding(mesh, len(self.input_shape) + 1)
+
+        def run_sharded(x):
+            x = jnp.asarray(x, dtype=jnp.float32)
+            b = x.shape[0]
+            pad = (-b) % n_dev
+            if pad:  # B need not divide the mesh: pad rows are sliced off
+                x = jnp.concatenate(
+                    [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+            x = jax.device_put(x, in_sharding)
+            return jit_forward(x, ws)[:b]
+
+        return run_sharded
 
     def run(self, images) -> ExecutionResult:
         """Execute the whole program on a batch of images → logits."""
@@ -342,7 +414,7 @@ class ProgramExecutor:
         wall = time.perf_counter() - t0
         return ExecutionResult(
             outputs=out, events=self.events, backend=self.backend,
-            batch=x.shape[0], wall_s=wall,
+            batch=x.shape[0], wall_s=wall, n_shards=self.n_shards,
         )
 
     def __call__(self, images) -> np.ndarray:

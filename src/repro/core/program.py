@@ -191,7 +191,8 @@ class CompiledProgram:
         leading image axis, on the ``"numpy"`` oracle or the ``"jax"``
         backend (block einsums lowered to the Pallas ``com_matmul``
         kernel). Keyword arguments pass through (``interpret``,
-        ``block_m``/``block_n``/``block_k``)."""
+        ``block_m``/``block_n``/``block_k``, ``shard`` — the multi-device
+        batch-axis scale-out mode)."""
         from repro.core.executor import ProgramExecutor
 
         return ProgramExecutor(self, weights, backend=backend, **kwargs)

@@ -31,6 +31,25 @@ def make_debug_mesh(data: int = 2, model: int = 2, *, pod: int = 0):
     return jax_compat.make_mesh((data, model), ("data", "model"))
 
 
+def make_data_mesh(devices=None):
+    """1-D ``("data",)`` mesh over the visible (or given) devices.
+
+    The scale-out substrate for the sharded sweep backend
+    (``repro.parallel.shard_sweep``) and the sharded ``ProgramExecutor``
+    mode: both partition one leading batch-like axis, so a flat
+    data-parallel mesh is the whole topology. Accepts an explicit device
+    subset so tests can build 1/2/8-device meshes from one forced-host-
+    device process (``XLA_FLAGS=--xla_force_host_platform_device_count=8``,
+    the SNIPPETS idiom CPU CI uses).
+    """
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = tuple(jax.devices()) if devices is None else tuple(devices)
+    return Mesh(np.asarray(devices, dtype=object), ("data",))
+
+
 # TPU v5e hardware constants (roofline denominators; brief-provided)
 PEAK_FLOPS_BF16 = 197e12      # per chip
 HBM_BW = 819e9                # bytes/s per chip

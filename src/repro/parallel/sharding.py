@@ -140,6 +140,19 @@ def act_rules(mesh: Mesh, *, job: str = "train", seq_shard: bool = False) -> Sha
     return ShardingRules(rules=rules, mesh=mesh)
 
 
+def leading_axis_sharding(mesh: Mesh, ndim: int = 1,
+                          axis: str = "data") -> NamedSharding:
+    """``NamedSharding`` that partitions only the leading array axis.
+
+    The one spec the data-parallel scale-out paths need: the sharded sweep
+    backend places the flat per-scenario arrays with it, and the sharded
+    ``ProgramExecutor`` places the padded image batch with it, so the
+    jitted ``shard_map`` computation starts from device-local shards
+    instead of an XLA reshard.
+    """
+    return NamedSharding(mesh, P(axis, *([None] * (ndim - 1))))
+
+
 def make_shard_fn(mesh: Mesh, rules: ShardingRules):
     """Returns CallConfig.shard_fn: (x, logical_axes) -> constrained x."""
 

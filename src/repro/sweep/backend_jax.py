@@ -111,6 +111,23 @@ def _columns_kernel_flat(
     return {c: jnp.broadcast_to(v, chips.shape) for c, v in cols.items()}
 
 
+def flat_views(batch: ScenarioBatch):
+    """The per-scenario flat ``(n,)`` float64 gathers of a chunked batch:
+    ``(chips, bits, e_mac, tpc, {field: summary})``. Requires
+    ``batch.sel``; shared by the chunked kernel here and the mesh-sharded
+    backend (``repro.parallel.shard_sweep``), which shards exactly these
+    arrays over the ``("data",)`` axis."""
+    assert batch.sel is not None, "flat_views needs a chunked (sel) batch"
+    return (
+        np.asarray(batch.axis_view(batch.chips, 1), dtype=np.float64),
+        np.asarray(batch.axis_view(batch.bits, 2), dtype=np.float64),
+        np.asarray(batch.axis_view(batch.e_mac, 3), dtype=np.float64),
+        np.asarray(batch.axis_view(batch.tpc, 4), dtype=np.float64),
+        {f: np.asarray(batch.summary_view(f), dtype=np.float64)
+         for f in batch.summary},
+    )
+
+
 def jax_backend(batch: ScenarioBatch) -> Dict[str, np.ndarray]:
     """Evaluate a :class:`ScenarioBatch` on the jitted kernel (float64)."""
     with enable_x64():
@@ -118,12 +135,10 @@ def jax_backend(batch: ScenarioBatch) -> Dict[str, np.ndarray]:
         if batch.sel is not None:
             # chunked mode: the batch's views gather the selected rows on
             # host; the kernel sees flat (chunk,) arrays only
+            chips, bits, e_mac, tpc, summary = flat_views(batch)
             out = _columns_kernel_flat(
-                f64(batch.axis_view(batch.chips, 1)),
-                f64(batch.axis_view(batch.bits, 2)),
-                f64(batch.axis_view(batch.e_mac, 3)),
-                f64(batch.axis_view(batch.tpc, 4)),
-                {f: f64(batch.summary_view(f)) for f in batch.summary},
+                f64(chips), f64(bits), f64(e_mac), f64(tpc),
+                {f: f64(a) for f, a in summary.items()},
                 f64(batch.fdm_factor), f64(batch.step_hz),
                 f64(batch.pipeline_eff),
             )

@@ -15,6 +15,10 @@ Backends (``run_sweep(grid, backend=...)``):
 * ``"jax"``   — ``repro.sweep.backend_jax``: the same column math lowered
   to a single jitted kernel over the stacked scenario arrays, golden-tested
   against the NumPy oracle to 1e-6. Registered lazily on first use.
+* ``"jax-sharded"`` — ``repro.parallel.shard_sweep``: the jitted kernel
+  with the scenario axis sharded across a ``("data",)`` device mesh via
+  ``shard_map`` (bitwise-identical to ``"jax"``, composes with
+  ``chunk_size``, single-device fallback). Registered lazily on first use.
 
 Third-party backends register through :func:`register_backend`; a backend
 is any callable taking a :class:`ScenarioBatch` and returning the
@@ -28,7 +32,7 @@ import operator
 import time
 from dataclasses import dataclass
 from functools import lru_cache
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -289,10 +293,18 @@ def register_backend(name: str, fn: SweepBackend) -> None:
     BACKENDS[name] = fn
 
 
-def _resolve_backend(name: str) -> SweepBackend:
+def _resolve_backend(name) -> SweepBackend:
+    if callable(name) and not isinstance(name, str):
+        # an unregistered SweepBackend callable passes straight through —
+        # e.g. repro.parallel.shard_sweep.make_sharded_backend(mesh) bound
+        # to an explicit device submesh
+        return name
     if name == "jax" and name not in BACKENDS:
         # lazy: importing registers it, and keeps JAX off the NumPy path
         import repro.sweep.backend_jax  # noqa: F401
+    if name == "jax-sharded" and name not in BACKENDS:
+        # mesh-sharded scale-out path: scenario axis over a ("data",) mesh
+        import repro.parallel.shard_sweep  # noqa: F401
     try:
         return BACKENDS[name]
     except KeyError:
@@ -360,10 +372,13 @@ class SweepResult:
         return out
 
 
-def run_sweep(grid: SweepGrid, backend: str = "numpy",
+def run_sweep(grid: SweepGrid, backend: Union[str, SweepBackend] = "numpy",
               arch: ArchSpec = DEFAULT_ARCH,
               chunk_size: Optional[int] = None) -> SweepResult:
-    """Evaluate every scenario of a validated grid on the chosen backend.
+    """Evaluate every scenario of a validated grid on the chosen backend —
+    a registered name (``"numpy"``, ``"jax"``, ``"jax-sharded"``) or any
+    ``SweepBackend`` callable (e.g. a mesh-bound backend from
+    ``repro.parallel.shard_sweep.make_sharded_backend``).
 
     ``arch`` is the base architecture template; the grid's architecture
     axes (``tiles_per_chip``, ``n_c``, ``n_m``, ``node_nm``) are
@@ -417,7 +432,9 @@ def run_sweep(grid: SweepGrid, backend: str = "numpy",
             peak = max(peak, sel.shape[0] * per_row)
     return SweepResult(
         grid=grid, columns=cols, engine_wall_s=time.perf_counter() - t0,
-        backend=backend, chunk_size=chunk_size, peak_chunk_bytes=peak,
+        backend=(backend if isinstance(backend, str)
+                 else getattr(backend, "__name__", "custom")),
+        chunk_size=chunk_size, peak_chunk_bytes=peak,
     )
 
 

@@ -1,0 +1,130 @@
+"""Mesh-sharded bitwise-parity assertions, run as a SUBPROCESS with its
+own XLA_FLAGS (the brief forbids forcing host device count globally in
+conftest).
+
+Covers the multi-device acceptance surface of the scale-out layer:
+
+* sweep: the ``"jax-sharded"`` backend is bitwise-identical to the
+  unsharded ``"jax"`` backend on the same flat/chunked evaluation, and
+  bitwise-invariant across 1/2/8-device submeshes — full-batch, chunked,
+  and chunk sizes that don't divide the mesh (edge-padding path);
+* executor: ``ProgramExecutor(..., shard=...)`` logits are bitwise-exact
+  vs the unsharded jax backend at batch sizes that do and don't divide
+  the device count (zero-padding path), across 8/2/1-device meshes.
+
+Usage: python tests/_shard_checks.py  -> exit 0 iff all checks pass.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# the forced host devices only exist on the CPU platform; pin it so a
+# machine with an accelerator (or a stray libtpu) doesn't initialize that
+# backend first and hide the 8-device CPU view (export JAX_PLATFORMS
+# yourself to run the checks elsewhere)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core import compile_program
+from repro.core.arch import DEFAULT_ARCH
+from repro.core.executor import ProgramExecutor, random_weights
+from repro.core.mapping import ConvSpec, FCSpec
+from repro.core.program import Workload
+from repro.launch.mesh import make_data_mesh
+from repro.parallel.shard_sweep import make_sharded_backend
+from repro.sweep import COLUMNS, SweepGrid, run_sweep
+from repro.sweep.registry import NETWORKS
+
+
+def small_grid() -> SweepGrid:
+    # 2 networks x 3 chips x 2 precisions x 2 e_mac = 24 scenarios —
+    # deliberately NOT a multiple of 8 so sharding pads the scenario axis
+    return SweepGrid(
+        networks=tuple(list(NETWORKS)[:2]),
+        chip_counts=(5, 10, 20),
+        precisions=(8, 16),
+        e_mac_pj=(0.02, 0.1),
+    )
+
+
+def assert_columns_bitwise(a, b, what: str):
+    for c in COLUMNS:
+        if not np.array_equal(a.columns[c], b.columns[c]):
+            i = int(np.argmax(a.columns[c] != b.columns[c]))
+            raise AssertionError(
+                f"{what}: column {c} differs at scenario {i}: "
+                f"{a.columns[c][i].hex()} vs {b.columns[c][i].hex()}")
+
+
+def check_sweep_sharded_bitwise():
+    devices = jax.devices()
+    assert len(devices) == 8, f"expected 8 forced host devices, got {devices}"
+    grid = small_grid()
+
+    # the unsharded reference on the same flat evaluation (one full chunk)
+    for chunk in (None, 7, 16):
+        cs = chunk or grid.n_scenarios
+        ref = run_sweep(grid, backend="jax", chunk_size=cs)
+        sharded = run_sweep(grid, backend="jax-sharded", chunk_size=chunk)
+        assert_columns_bitwise(
+            ref, sharded, f"jax-sharded vs jax (chunk_size={chunk})")
+
+        # bitwise-invariant across 1/2/8-device submeshes of one process
+        for k in (1, 2, 8):
+            sub = run_sweep(
+                grid, backend=make_sharded_backend(
+                    make_data_mesh(devices[:k])),
+                chunk_size=chunk)
+            assert_columns_bitwise(
+                sharded, sub,
+                f"8-dev vs {k}-dev submesh (chunk_size={chunk})")
+    print("sweep sharded bitwise parity OK (full + chunked, 1/2/8 dev)")
+
+
+def check_executor_sharded_bitwise():
+    devices = jax.devices()
+    # multi-block chain at the reduced 8x8 geometry: C > n_c and M > n_m
+    # forced, so the sharded run exercises real block-chain programs while
+    # staying fast in interpret mode
+    wl = Workload("shard-exec", (
+        ConvSpec("c0", 3, 3, 12, 8, 8, pool_k=2),
+        ConvSpec("c1", 3, 12, 10, 4, 4),
+        FCSpec("f0", 160, 20),
+        FCSpec("f1", 20, 5),
+    ))
+    program = compile_program(wl, DEFAULT_ARCH.replace(n_c=8, n_m=8))
+    weights = random_weights(program, seed=3)
+    rng = np.random.default_rng(7)
+
+    base = ProgramExecutor(program, weights, backend="jax", interpret=True)
+    # B=5 and B=13 don't divide 8 (zero-padding path); B=8 divides exactly
+    for b in (1, 5, 8, 13):
+        imgs = rng.normal(size=(b,) + base.input_shape)
+        want = base.run(imgs)
+        for k in (8, 2, 1):
+            sh = ProgramExecutor(
+                program, weights, backend="jax", interpret=True,
+                shard=make_data_mesh(devices[:k]))
+            assert sh.n_shards == (k if k > 1 else 1)
+            got = sh.run(imgs)
+            assert got.n_shards == sh.n_shards
+            if not np.array_equal(np.asarray(got.outputs),
+                                  np.asarray(want.outputs)):
+                raise AssertionError(
+                    f"sharded executor logits differ at B={b}, {k} devices")
+    # shard="auto" resolves to the full visible mesh
+    auto = ProgramExecutor(program, weights, backend="jax", interpret=True,
+                           shard="auto")
+    assert auto.n_shards == 8, auto.n_shards
+    print("executor sharded bitwise parity OK (B=1/5/8/13 x 8/2/1 dev)")
+
+
+if __name__ == "__main__":
+    check_sweep_sharded_bitwise()
+    check_executor_sharded_bitwise()
+    print("ALL SHARD CHECKS PASSED")

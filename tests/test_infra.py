@@ -353,9 +353,9 @@ def test_compare_bench_executor_kind_and_history_append():
         jax_max_rel_err_vs_numpy=1e-6, interpret=True,
         backends=["numpy", "jax"],
         batches={"1": dict(numpy_img_s=8.0),
-                 "32": dict(numpy_img_s=10.0, numpy_per_image_img_s=6.0,
-                            jax_img_s=img_s,
-                            jax_vs_per_image_speedup=img_s / 6.0)},
+                 "8": dict(numpy_img_s=10.0, numpy_per_image_img_s=6.0,
+                           jax_img_s=img_s,
+                           jax_vs_per_image_speedup=img_s / 6.0)},
     )
     base, cur = mk(14.0), mk(12.0)
     assert cb.detect_kind(cur) == "executor"  # despite the "backends" key
@@ -363,7 +363,7 @@ def test_compare_bench_executor_kind_and_history_append():
     assert regressions == 0                   # img/s drift is perf-class
     by = {r["metric"]: r for r in rows}
     assert by["events_match"]["status"] == "ok"
-    assert by["batches.32.jax_img_s"]["cur"] == 12.0
+    assert by["batches.8.jax_img_s"]["cur"] == 12.0
     # a flipped event check IS a fidelity regression
     bad = dict(cur, events_match=False)
     assert cb.compare(base, bad, 1e-9, 0.5)[1] == 1
@@ -380,5 +380,129 @@ def test_compare_bench_executor_kind_and_history_append():
         assert [l["sha"] for l in lines] == ["aaa111", "bbb222"]
         for l in lines:
             assert l["kind"] == "executor" and l["regressions"] == 0
-            assert l["metrics"]["batches.32.jax_img_s"] == 12.0
+            assert l["metrics"]["batches.8.jax_img_s"] == 12.0
             assert "utc" in l
+
+
+def test_compare_bench_sharded_and_checksum_fidelity_gate():
+    """The multi-device fidelity gate: the sharded-parity bools and the
+    oracle logits checksum are fidelity-class (strict CI fails on them);
+    the sharded wall-clock stays perf-class."""
+    cb = _load_compare_bench()
+    sweep = dict(
+        n_scenarios=2, sharded_bitwise_equal_jax=True,
+        sharded_max_rel_err_vs_numpy=3.5e-16,
+        backends={"numpy": {"engine_wall_s": 1e-3},
+                  "jax-sharded": {"engine_wall_s": 2e-3}},
+    )
+    # parity bool flips -> fidelity regression
+    rows, n = cb.compare(sweep, dict(sweep, sharded_bitwise_equal_jax=False),
+                         1e-9, 0.5)
+    assert n == 1
+    assert {r["metric"]: r for r in rows}[
+        "sharded_bitwise_equal_jax"]["status"] == "REGRESSION"
+    # the tiny error bound wobbling under the 1e-12 atol floor is NOT
+    # (cross-runner XLA codegen moves it by ~1e-16)
+    ok = dict(sweep, sharded_max_rel_err_vs_numpy=4.1e-16)
+    assert cb.compare(sweep, ok, 1e-9, 0.5)[1] == 0
+    # sharded wall-clock tanking is informational drift
+    slow = dict(sweep, backends={"numpy": {"engine_wall_s": 1e-3},
+                                 "jax-sharded": {"engine_wall_s": 9e-3}})
+    rows, n = cb.compare(sweep, slow, 1e-9, 0.5)
+    assert n == 0
+    assert {r["metric"]: r for r in rows}[
+        "backends.jax-sharded.engine_wall_s"]["status"] == "drift"
+
+    execu = dict(
+        network="x", n_layers=4, events_match=True, logits_checksum=123.456,
+        sharded_matches_jax=True, batches={"8": dict(jax_sharded_img_s=5.0)},
+    )
+    rows, n = cb.compare(execu, dict(execu, logits_checksum=123.457),
+                         1e-9, 0.5)
+    assert n == 1  # checksum moved beyond 1e-9 -> the logits changed
+    assert cb.compare(execu, dict(execu, sharded_matches_jax=False),
+                      1e-9, 0.5)[1] == 1
+    assert cb.compare(
+        execu, dict(execu, batches={"8": dict(jax_sharded_img_s=500.0)}),
+        1e-9, 0.5)[1] == 0
+
+
+def test_compare_bench_history_records_devices():
+    cb = _load_compare_bench()
+    payload = dict(n_scenarios=2, n_devices=8,
+                   backends={"numpy": {"engine_wall_s": 1e-3}})
+    with tempfile.TemporaryDirectory() as d:
+        pb, pc = os.path.join(d, "b.json"), os.path.join(d, "c.json")
+        hist = os.path.join(d, "h.jsonl")
+        json.dump(payload, open(pb, "w")); json.dump(payload, open(pc, "w"))
+        assert cb.main([pc, "--baseline", pb, "--history", hist,
+                        "--sha", "abc"]) == 0
+        (line,) = [json.loads(l) for l in open(hist)]
+        assert line["devices"] == 8
+
+
+# ---------------------------------------------------------------------------
+# bench-history dashboard renderer (tools/render_bench_history.py)
+# ---------------------------------------------------------------------------
+
+
+def _load_render_bench_history():
+    import importlib.util
+
+    path = os.path.join(os.path.dirname(__file__), "..", "tools",
+                        "render_bench_history.py")
+    spec = importlib.util.spec_from_file_location("render_bench_history", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _history_lines():
+    return [
+        dict(sha=f"sha{i:07d}xx", utc=f"2026-08-0{i + 1}T00:00:00+00:00",
+             label="sweep", kind="sweep", devices=8 if i else 1,
+             regressions=0,
+             metrics={"rows:ce_tops_w:mean": 12.5 + 0.1 * i,
+                      "backends.jax.engine_wall_s": 0.3 / (i + 1)})
+        for i in range(3)
+    ]
+
+
+def test_render_bench_history_dashboard():
+    rb = _load_render_bench_history()
+    text = rb.render(_history_lines())
+    # one section per label, a table row per metric, both sparkline forms
+    assert "## sweep (sweep)" in text
+    assert "| `rows:ce_tops_w:mean` |" in text
+    assert "<svg" in text and "polyline" in text
+    assert any(ch in text for ch in rb.SPARK_CHARS)
+    assert "3 run(s) charted" in text
+    # device counts varied across the charted runs -> called out
+    assert "Device counts varied" in text
+    # empty history renders a stub, not a crash
+    assert "No history lines yet" in rb.render([])
+
+
+def test_render_bench_history_sparklines():
+    rb = _load_render_bench_history()
+    assert rb.spark_unicode([1.0, 2.0, 3.0]) == "▁▅█"
+    assert rb.spark_unicode([5.0, 5.0]) == "▅▅"  # flat series mid-row
+    svg = rb.spark_svg([1.0, 2.0])
+    assert svg.startswith("<svg") and svg.endswith("</svg>")
+    assert rb.spark_svg([1.0]).count("circle") == 1  # single point = dot
+
+
+def test_render_bench_history_main_writes_dashboard(capsys):
+    rb = _load_render_bench_history()
+    with tempfile.TemporaryDirectory() as d:
+        hist = os.path.join(d, "bench-history.jsonl")
+        with open(hist, "w") as f:
+            for line in _history_lines():
+                f.write(json.dumps(line) + "\n")
+            f.write("{not json\n")  # a truncated append must be skipped
+        out = os.path.join(d, "bench-dashboard.md")
+        assert rb.main([hist, "--out", out]) == 0
+        written = open(out).read()
+    assert "# Bench history dashboard" in written
+    assert written.strip() == capsys.readouterr().out.strip().replace(
+        f"wrote {out}", "").strip()

@@ -1,0 +1,186 @@
+"""Render ``bench-history.jsonl`` into the bench dashboard.
+
+``tools/compare_bench.py --history`` appends one JSON line per compared
+artifact per CI run (commit SHA, UTC timestamp, device count, metric
+values). This tool turns that buried trend file into a readable artifact:
+one section per benchmark label, with a markdown table of every metric's
+latest value, run-over-run delta, and a sparkline of its recent history —
+both a unicode sparkline (renders anywhere markdown does) and an inline
+SVG polyline (crisper; survives in the uploaded ``bench-dashboard.md``,
+though chat/web renderers that sanitize raw HTML show the unicode column
+only). Dependency-free.
+
+CI pipes the output into ``$GITHUB_STEP_SUMMARY`` and uploads it as
+``bench-dashboard.md``::
+
+    python tools/render_bench_history.py bench-history.jsonl \
+        --out bench-dashboard.md | tee -a "$GITHUB_STEP_SUMMARY"
+
+Multiple history files concatenate (e.g. a downloaded run-history series
+next to this run's file): lines render in file-then-line order, so pass
+older files first.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Dict, List, Optional, Sequence
+
+SPARK_CHARS = "▁▂▃▄▅▆▇█"
+SVG_W, SVG_H = 120, 24
+SVG_PAD = 2
+
+
+def load_history(paths: Sequence[str]) -> List[Dict]:
+    """Parse history lines in order; skip malformed lines with a warning
+    (a truncated append must not take the whole dashboard down)."""
+    lines: List[Dict] = []
+    for path in paths:
+        with open(path) as f:
+            for i, raw in enumerate(f, 1):
+                raw = raw.strip()
+                if not raw:
+                    continue
+                try:
+                    obj = json.loads(raw)
+                except json.JSONDecodeError:
+                    print(f"render_bench_history: skipping malformed line "
+                          f"{path}:{i}", file=sys.stderr)
+                    continue
+                if isinstance(obj, dict) and isinstance(
+                        obj.get("metrics"), dict):
+                    lines.append(obj)
+    return lines
+
+
+def _normalize(vals: Sequence[float]) -> List[float]:
+    """Min-max normalize to [0, 1]; a flat series maps to 0.5."""
+    lo, hi = min(vals), max(vals)
+    if not math.isfinite(lo) or not math.isfinite(hi) or hi == lo:
+        return [0.5] * len(vals)
+    return [(v - lo) / (hi - lo) for v in vals]
+
+
+def spark_unicode(vals: Sequence[float]) -> str:
+    """Unicode block sparkline — one char per point, oldest first."""
+    if not vals:
+        return ""
+    return "".join(
+        SPARK_CHARS[min(int(y * len(SPARK_CHARS)), len(SPARK_CHARS) - 1)]
+        for y in _normalize(vals))
+
+
+def spark_svg(vals: Sequence[float], w: int = SVG_W, h: int = SVG_H) -> str:
+    """Inline SVG polyline sparkline (single-point series draw a dot)."""
+    if not vals:
+        return ""
+    ys = _normalize(vals)
+    if len(ys) == 1:
+        cx, cy = w / 2, h / 2
+        body = f'<circle cx="{cx:g}" cy="{cy:g}" r="2" fill="#1f77b4"/>'
+    else:
+        dx = (w - 2 * SVG_PAD) / (len(ys) - 1)
+        pts = " ".join(
+            f"{SVG_PAD + i * dx:.1f},"
+            f"{h - SVG_PAD - y * (h - 2 * SVG_PAD):.1f}"
+            for i, y in enumerate(ys))
+        body = (f'<polyline points="{pts}" fill="none" stroke="#1f77b4" '
+                f'stroke-width="1.5"/>')
+    return (f'<svg xmlns="http://www.w3.org/2000/svg" width="{w}" '
+            f'height="{h}" viewBox="0 0 {w} {h}" role="img">{body}</svg>')
+
+
+def _fmt(v: Optional[float]) -> str:
+    if v is None:
+        return "—"
+    if isinstance(v, float) and math.isnan(v):
+        return "nan"
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.6g}"
+
+
+def _short_sha(sha: Optional[str]) -> str:
+    return (sha or "?")[:9]
+
+
+def render(lines: List[Dict], max_points: int = 50) -> str:
+    """The dashboard markdown: one section per label, newest values +
+    run-over-run delta + sparklines over the last ``max_points`` runs."""
+    out = ["# Bench history dashboard", ""]
+    if not lines:
+        out += ["_No history lines yet — run `tools/compare_bench.py "
+                "--history bench-history.jsonl` first._", ""]
+        return "\n".join(out)
+
+    labels = list(dict.fromkeys(l.get("label", "?") for l in lines))
+    n_runs = len({(l.get("sha"), l.get("utc")) for l in lines})
+    first, last = lines[0], lines[-1]
+    out += [f"{len(lines)} history line(s) across {n_runs} run(s), "
+            f"`{_short_sha(first.get('sha'))}` → "
+            f"`{_short_sha(last.get('sha'))}` "
+            f"({last.get('utc', '?')}).", ""]
+
+    for label in labels:
+        series = [l for l in lines if l.get("label", "?") == label][-max_points:]
+        latest = series[-1]
+        devices = [l.get("devices") for l in series if l.get("devices")]
+        dev_note = (f", {latest.get('devices')} device(s) on latest run"
+                    if latest.get("devices") else "")
+        out += [f"## {label} ({latest.get('kind', '?')})",
+                "",
+                f"{len(series)} run(s) charted{dev_note}; latest "
+                f"`{_short_sha(latest.get('sha'))}` at "
+                f"{latest.get('utc', '?')} with "
+                f"{latest.get('regressions', 0)} fidelity regression(s).",
+                ""]
+        if devices and len(set(devices)) > 1:
+            out += [f"Device counts varied across charted runs: "
+                    f"{sorted(set(devices))} — wall-clock trends mix "
+                    f"machine shapes.", ""]
+        metrics = list(dict.fromkeys(
+            m for l in series for m in l["metrics"]))
+        out += ["| metric | latest | Δ vs prev | trend | sparkline |",
+                "| --- | ---: | ---: | --- | --- |"]
+        for m in metrics:
+            vals = [l["metrics"][m] for l in series
+                    if isinstance(l["metrics"].get(m), (int, float))]
+            if not vals:
+                continue
+            cur = vals[-1]
+            if len(vals) > 1 and vals[-2] != 0:
+                delta = f"{(cur - vals[-2]) / abs(vals[-2]):+.2%}"
+            elif len(vals) > 1:
+                delta = "—" if cur == vals[-2] else "new≠0"
+            else:
+                delta = "—"
+            out.append(f"| `{m}` | {_fmt(cur)} | {delta} | "
+                       f"{spark_unicode(vals)} | {spark_svg(vals)} |")
+        out.append("")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("history", nargs="+",
+                    help="bench-history.jsonl file(s), oldest first")
+    ap.add_argument("--max-points", type=int, default=50,
+                    help="chart at most this many trailing runs per label")
+    ap.add_argument("--out", default=None,
+                    help="also write the dashboard markdown here "
+                         "(bench-dashboard.md); stdout always gets it")
+    args = ap.parse_args(argv)
+
+    text = render(load_history(args.history), max_points=args.max_points)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
