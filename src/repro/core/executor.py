@@ -312,7 +312,12 @@ class ProgramExecutor:
         import jax
         import jax.numpy as jnp
 
+        from repro.core.jax_compat import maybe_init_compile_cache
         from repro.kernels.com_matmul import com_matmul_padded
+
+        # opt-in persistent XLA cache (REPRO_COMPILE_CACHE=<dir>): repeat
+        # runs load the jitted chain instead of recompiling it
+        maybe_init_compile_cache()
 
         interpret = self.interpret
         if interpret is None:

@@ -6,10 +6,15 @@ on jax 0.4.x where those spell ``jax.experimental.shard_map.shard_map`` with
 ``check_rep`` and ``jax.make_mesh`` has no ``axis_types`` parameter. All mesh
 construction and shard_map entry points in the repo route through here so the
 skew lives in exactly one file.
+
+Also home to :func:`maybe_init_compile_cache` — the opt-in persistent XLA
+compilation cache (``REPRO_COMPILE_CACHE=<dir>``) that lets repeat runs of
+the jitted executor chain / sweep kernels skip recompilation entirely.
 """
 from __future__ import annotations
 
-from typing import Any, Sequence
+import os
+from typing import Any, Optional, Sequence
 
 import jax
 
@@ -47,3 +52,40 @@ def shard_map(f: Any, *, mesh: Any, in_specs: Any, out_specs: Any) -> Any:
     return _shard_map(
         f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
     )
+
+
+# sentinel: None = not yet checked; "" = checked, cache disabled
+_COMPILE_CACHE_DIR: Optional[str] = None
+
+
+def maybe_init_compile_cache() -> Optional[str]:
+    """Point XLA's persistent compilation cache at ``$REPRO_COMPILE_CACHE``.
+
+    Opt-in and idempotent: does nothing unless the env var names a
+    directory; the first call wires ``jax.experimental.compilation_cache``
+    at that path (created if missing) and later calls are no-ops. Returns
+    the active cache directory, or ``None`` when disabled. Repeat
+    benchmark/CI runs with the same env var skip XLA recompilation of the
+    executor chain and sweep kernels entirely — the B=1 latency path's
+    dominant cost (maxtext wires the same cache; SNIPPETS.md 1–2).
+    """
+    global _COMPILE_CACHE_DIR
+    if _COMPILE_CACHE_DIR is None:
+        path = os.environ.get("REPRO_COMPILE_CACHE", "")
+        if path:
+            os.makedirs(path, exist_ok=True)
+            from jax.experimental.compilation_cache import (
+                compilation_cache as cc,
+            )
+
+            cc.set_cache_dir(path)
+            # persist small/fast compilations too — the block einsums the
+            # executor emits are individually cheap but numerous
+            for flag in ("jax_persistent_cache_min_entry_size_bytes",
+                         "jax_persistent_cache_min_compile_time_secs"):
+                try:
+                    jax.config.update(flag, 0)
+                except (AttributeError, KeyError):  # older jax: flag absent
+                    pass
+        _COMPILE_CACHE_DIR = path
+    return _COMPILE_CACHE_DIR or None

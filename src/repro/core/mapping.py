@@ -126,6 +126,14 @@ def greedy_place(layers: List, arch: ArchSpec = DEFAULT_ARCH) -> List[TileAlloc]
             TileAlloc(layer=layer, n_tiles=n, grid=grid, chip_ids=tuple(chips),
                       crosses_chip=len(set(chips)) > 1 or chips[0] != start_chip)
         )
+    # the legality rules this pass used to guarantee only implicitly live
+    # in the shared validator now (repro.search.space); asserting them here
+    # turns a capacity overflow or span inconsistency into a ValueError
+    # instead of a silent mis-mapping (late import: core must not depend
+    # on the search package at module load)
+    from repro.search.space import validate_allocs
+
+    validate_allocs(allocs, arch)
     return allocs
 
 

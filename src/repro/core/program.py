@@ -161,6 +161,11 @@ class CompiledProgram:
     layer_programs: Tuple[LayerProgram, ...]
     allocs: Tuple[TileAlloc, ...]
     event_totals: Mapping[str, int]
+    # how the placement/blocking was chosen: "greedy" (the default
+    # compile path) or "searched" (repro.search); a searched program
+    # carries the realized MappingCandidate for provenance
+    mapping: str = "greedy"
+    candidate: object = None
 
     @property
     def n_tiles(self) -> int:
@@ -206,15 +211,26 @@ class CompiledProgram:
         return self.executor(weights, backend=backend, **kwargs).run(images)
 
 
-def _blocks_for(layer: LayerSpec, arch: ArchSpec) -> Tuple[int, int, Tuple[LayerBlock, ...]]:
-    """The explicit block grid of one layer: channel ranges + schedule roles."""
-    cb, mb = arch.block_partition(layer.c_in, layer.c_out)
+def _blocks_for(layer: LayerSpec, arch: ArchSpec,
+                n_c: int = 0, n_m: int = 0) -> Tuple[int, int, Tuple[LayerBlock, ...]]:
+    """The explicit block grid of one layer: channel ranges + schedule roles.
+
+    ``n_c``/``n_m`` override the architecture's full-array blocking with a
+    candidate mapping's per-layer block sizes (0 = use ``arch``, the
+    committed partition).
+    """
+    if n_c or n_m:
+        n_c, n_m = n_c or arch.n_c, n_m or arch.n_m
+        cb, mb = -(-layer.c_in // n_c), -(-layer.c_out // n_m)
+    else:
+        n_c, n_m = arch.n_c, arch.n_m
+        cb, mb = arch.block_partition(layer.c_in, layer.c_out)
     k2 = layer.k * layer.k if isinstance(layer, ConvSpec) else 1
     blocks: List[LayerBlock] = []
     for ci in range(cb):
-        cs, ce = ci * arch.n_c, min((ci + 1) * arch.n_c, layer.c_in)
+        cs, ce = ci * n_c, min((ci + 1) * n_c, layer.c_in)
         for mi in range(mb):
-            ms, me = mi * arch.n_m, min((mi + 1) * arch.n_m, layer.c_out)
+            ms, me = mi * n_m, min((mi + 1) * n_m, layer.c_out)
             spec = dataclasses.replace(
                 layer, name=f"{layer.name}[c{ci}m{mi}]",
                 c_in=ce - cs, c_out=me - ms,
@@ -258,19 +274,85 @@ def _compile_program(workload: Workload, arch: ArchSpec) -> CompiledProgram:
     )
 
 
-def compile_program(workload, arch: ArchSpec = DEFAULT_ARCH) -> CompiledProgram:
+# Bounded like _compile_program; separate cache so greedy compile lines
+# (the hot path every consumer shares) are never evicted by search
+# experiments. Introspect via repro.core.cache_stats().
+@lru_cache(maxsize=64)
+def _compile_candidate(workload: Workload, arch: ArchSpec,
+                       candidate) -> CompiledProgram:
+    import numpy as np
+
+    from repro.search.space import candidate_allocs, validate_candidate
+
+    layers = workload.layers
+    validate_candidate(layers, arch, candidate)
+    allocs, _starts = candidate_allocs(layers, arch, candidate)
+    per_layer_events = batched_layer_events(
+        layer_table(layers), arch,
+        n_c_eff=np.asarray(candidate.block_c, dtype=np.int64),
+        n_m_eff=np.asarray(candidate.block_m, dtype=np.int64),
+    )
+    programs: List[LayerProgram] = []
+    for i, (layer, alloc) in enumerate(zip(layers, allocs)):
+        cb, mb, blocks = _blocks_for(
+            layer, arch, n_c=candidate.block_c[i], n_m=candidate.block_m[i])
+        programs.append(LayerProgram(
+            layer=layer, arch=arch, alloc=alloc, c_blocks=cb, m_blocks=mb,
+            blocks=blocks,
+            events={f: int(per_layer_events[f][i]) for f in EVENT_FIELDS},
+        ))
+    return CompiledProgram(
+        workload=workload, arch=arch, layer_programs=tuple(programs),
+        allocs=allocs,
+        event_totals={f: int(per_layer_events[f].sum()) for f in EVENT_FIELDS},
+        mapping="searched", candidate=candidate,
+    )
+
+
+def compile_program(workload, arch: ArchSpec = DEFAULT_ARCH,
+                    mapping="greedy") -> CompiledProgram:
     """Compile a workload for an architecture — THE evaluation entry point.
 
-    One call derives everything the stack consumes: greedy tile placement
+    One call derives everything the stack consumes: tile placement
     (``CompiledProgram.allocs``), the explicit per-layer block partition
     (``LayerProgram.blocks``), the per-tile periodic instruction schedules
     (``LayerProgram.schedules``), and the closed-form per-image event
     counts (``LayerProgram.events`` / ``CompiledProgram.event_totals``).
 
-    Memoized on the frozen ``(workload, arch)`` pair — workload equality
-    keys on the layer tuple, so anonymous and named workloads over the
-    same layers share one program, and repeated sweep scenarios get their
-    compilation for free. ``workload`` may be a :class:`Workload` or any
-    layer sequence (wrapped via :meth:`Workload.of`).
+    ``mapping`` selects how placement/blocking is chosen:
+
+    * ``"greedy"`` (default) — ``mapping.greedy_place`` + the full-array
+      block partition: the committed baseline, bitwise-unchanged.
+    * ``"searched"`` — ``repro.search.search_mapping(workload, arch)``
+      optimizes the mapping first (default budget/engine/seed; run
+      ``search_mapping`` yourself for custom budgets) and the program
+      realizes the winning candidate.
+    * a :class:`repro.search.space.MappingCandidate` — realize that exact
+      candidate (validated; raises ``ValueError`` if illegal).
+
+    Memoized on the frozen ``(workload, arch[, candidate])`` key —
+    workload equality keys on the layer tuple, so anonymous and named
+    workloads over the same layers share one program, and repeated sweep
+    scenarios get their compilation for free. ``workload`` may be a
+    :class:`Workload` or any layer sequence (wrapped via
+    :meth:`Workload.of`).
     """
-    return _compile_program(Workload.of(workload), arch)
+    wl = Workload.of(workload)
+    if isinstance(mapping, str):
+        if mapping == "greedy":
+            return _compile_program(wl, arch)
+        if mapping == "searched":
+            from repro.search import search_mapping
+
+            return _compile_candidate(
+                wl, arch, search_mapping(wl, arch).candidate)
+        raise ValueError(
+            f"unknown mapping {mapping!r}; expected 'greedy', 'searched', "
+            f"or a repro.search.space.MappingCandidate")
+    from repro.search.space import MappingCandidate
+
+    if isinstance(mapping, MappingCandidate):
+        return _compile_candidate(wl, arch, mapping)
+    raise ValueError(
+        f"unknown mapping {mapping!r}; expected 'greedy', 'searched', "
+        f"or a repro.search.space.MappingCandidate")

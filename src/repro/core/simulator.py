@@ -132,8 +132,12 @@ def conv_block_events(lp, arch: ArchSpec) -> Events:
     K, P = L.k, L.padding
     Ho, W = L.h_out, L.w_in
     px = Ho * L.w_out
-    m_bits = min(L.c_out, arch.n_m) * 8
-    c_bits = min(L.c_in, arch.n_c) * 8
+    # on-chip value widths come from the compiled block partition (equal to
+    # min(channels, arch geometry) at the default blocking; custom-blocked
+    # searched programs carry narrower slices)
+    (cs, ce), (ms, me) = lp.block(0, 0).c_range, lp.block(0, 0).m_range
+    m_bits = (me - ms) * 8
+    c_bits = (ce - cs) * 8
     ev = Events()
     for mi in range(lp.m_blocks):
         for ci in range(lp.c_blocks):
@@ -196,8 +200,9 @@ def fc_block_events(lp, arch: ArchSpec) -> Events:
     """Per-image event counts of one FC layer's systolic column execution
     (recounted from the block grid; see :func:`conv_block_events`)."""
     L = lp.layer
-    m_bits = min(L.c_out, arch.n_m) * 8
-    c_bits = min(L.c_in, arch.n_c) * 8
+    (cs, ce), (ms, me) = lp.block(0, 0).c_range, lp.block(0, 0).m_range
+    m_bits = (me - ms) * 8
+    c_bits = (ce - cs) * 8
     ev = Events()
     for _mi in range(lp.m_blocks):
         for ci in range(lp.c_blocks):
@@ -409,23 +414,30 @@ def layer_table(layers: Tuple) -> LayerTable:
     )
 
 
-def batched_layer_events(t: LayerTable, arch: ArchSpec = DEFAULT_ARCH) -> Dict[str, np.ndarray]:
+def batched_layer_events(t: LayerTable, arch: ArchSpec = DEFAULT_ARCH,
+                         n_c_eff=None, n_m_eff=None) -> Dict[str, np.ndarray]:
     """Per-layer event counts, (n_layers,) int64 per Events field.
 
     Same closed forms the scalar API always used — validated against
     COMGridSim — just evaluated as NumPy array expressions over the whole
     layer batch instead of a Python loop per layer. The ``arch`` geometry
-    (``n_c`` x ``n_m``) sets the block factors and on-chip value widths.
+    (``n_c`` x ``n_m``) sets the block factors and on-chip value widths;
+    ``n_c_eff``/``n_m_eff`` (broadcastable int arrays, e.g. per-layer
+    ``(n_layers,)`` or population ``(P, n_layers)``) override them with a
+    candidate mapping's actual per-layer blocking — the default ``None``
+    path is untouched (bitwise the committed counts).
     """
     conv = t.is_conv
     K = t.k
     K2 = K * K
-    cb = -(-t.c_in // arch.n_c)            # ceil-div
-    mb = -(-t.c_out // arch.n_m)
+    nc = arch.n_c if n_c_eff is None else np.asarray(n_c_eff, dtype=np.int64)
+    nm = arch.n_m if n_m_eff is None else np.asarray(n_m_eff, dtype=np.int64)
+    cb = -(-t.c_in // nc)                  # ceil-div
+    mb = -(-t.c_out // nm)
     px = t.h_out * t.w_out
     chains = cb * mb                       # parallel accumulation chains
-    m_bits = np.minimum(t.c_out, arch.n_m) * 8
-    c_bits = np.minimum(t.c_in, arch.n_c) * 8
+    m_bits = np.minimum(t.c_out, nm) * 8
+    c_bits = np.minimum(t.c_in, nc) * 8
     conv_hops = px * chains * (K2 + K - 1) + px * mb * (cb - 1)
     fc_hops = mb * (cb - 1) + mb           # column accumulation + egress
     ps_hops = np.where(conv, conv_hops, fc_hops)

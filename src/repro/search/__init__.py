@@ -1,0 +1,102 @@
+"""``repro.search`` — mapping/dataflow optimization over the compile IR.
+
+The subsystem the Domino reproduction was missing: ``compile_program``
+hardwired ``mapping.greedy_place``; this package searches the mapping
+space that placement lives in — per-layer NoC placement gaps, ``n_c×n_m``
+blocking, tile layout order, and chain egress rotation — for mappings
+that beat greedy on ps/ifm hop energy.
+
+Pieces:
+
+* :mod:`repro.search.space`  — candidate encoding + the legality
+  validator shared with ``mapping.greedy_place``.
+* :mod:`repro.search.cost`   — the cost model (closed-form base, bitwise
+  the committed baseline on greedy, + serpentine-NoC transit extension)
+  and the :class:`PopulationEvaluator` that batch-scores populations
+  through the sweep backends.
+* :mod:`repro.search.anneal` / :mod:`repro.search.evolve` — the engines.
+* :func:`search_mapping`     — the entry point
+  ``compile_program(workload, arch, mapping="searched")`` consumes.
+
+Results are memoized on ``(workload, arch, budget, engine, seed,
+backend)`` — ``repro.core.cache_stats()`` reports the cache as
+``search_mapping``.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+from repro.core.arch import DEFAULT_ARCH, ArchSpec
+from repro.search.anneal import anneal_search
+from repro.search.cost import (
+    MappingCost,
+    PopulationEvaluator,
+    SearchResult,
+    mapping_cost,
+)
+from repro.search.evolve import evolve_search
+from repro.search.space import (
+    MappingCandidate,
+    candidate_allocs,
+    greedy_candidate,
+    mutate,
+    validate_allocs,
+    validate_candidate,
+)
+
+ENGINES = {"anneal": anneal_search, "evolve": evolve_search}
+
+__all__ = [
+    "ENGINES",
+    "MappingCandidate",
+    "MappingCost",
+    "PopulationEvaluator",
+    "SearchResult",
+    "anneal_search",
+    "candidate_allocs",
+    "evolve_search",
+    "greedy_candidate",
+    "mapping_cost",
+    "mutate",
+    "search_mapping",
+    "validate_allocs",
+    "validate_candidate",
+]
+
+
+@lru_cache(maxsize=64)
+def _search_mapping(workload, arch: ArchSpec, budget: int, engine: str,
+                    seed: int, backend: str) -> SearchResult:
+    try:
+        fn = ENGINES[engine]
+    except KeyError:
+        raise ValueError(
+            f"unknown search engine {engine!r}; available: "
+            f"{sorted(ENGINES)}") from None
+    evaluator = PopulationEvaluator(workload.layers, arch, backend=backend)
+    return fn(workload.layers, arch, budget=budget, seed=seed,
+              evaluator=evaluator)
+
+
+def search_mapping(workload, arch: ArchSpec = DEFAULT_ARCH, *,
+                   budget: int = 256, engine: str = "evolve", seed: int = 0,
+                   backend: str = "jax") -> SearchResult:
+    """Search the mapping space of ``workload`` under ``arch``.
+
+    ``budget`` bounds total candidate evaluations (greedy included —
+    budget 1 returns greedy itself); ``engine`` is ``"evolve"`` (default)
+    or ``"anneal"``; ``seed`` makes the run bit-for-bit reproducible;
+    ``backend`` names the sweep backend scoring populations (``"jax"``
+    routes through the jitted sweep kernel, ``"numpy"`` the oracle).
+    Returns a :class:`~repro.search.cost.SearchResult` whose ``candidate``
+    feeds ``compile_program(workload, arch, mapping=result.candidate)``
+    (or let ``mapping="searched"`` call this for you). The searched cost
+    never exceeds the greedy cost — both engines start from greedy and
+    keep it unless strictly beaten.
+    """
+    from repro.core.program import Workload
+
+    if budget < 1:
+        raise ValueError(f"budget must be >= 1, got {budget}")
+    return _search_mapping(Workload.of(workload), arch, int(budget),
+                           engine, int(seed), backend)

@@ -427,6 +427,44 @@ def test_compare_bench_sharded_and_checksum_fidelity_gate():
         1e-9, 0.5)[1] == 0
 
 
+def test_compare_bench_search_kind_and_fidelity_gate():
+    """The mapping-search artifact: searched<=greedy / baseline-bitwise
+    bools and the per-network hop ratios are fidelity-class; wall-clock
+    drift stays informational."""
+    cb = _load_compare_bench()
+    mk = lambda r11, wall: dict(  # noqa: E731
+        budget=96, engine="evolve", seed=0, backend="jax",
+        searched_le_greedy=True, strictly_better_any=True,
+        greedy_matches_baseline=True, energy_ratio_mean=(r11 + 0.97) / 2,
+        networks={"vgg11-cifar": dict(hop_ratio=r11),
+                  "vgg16-imagenet": dict(hop_ratio=0.97)},
+        pareto=dict(n_points=8, n_front=2), wall_s=wall,
+    )
+    base, cur = mk(0.83, 10.0), mk(0.83, 30.0)
+    # "searched_le_greedy" outranks the "backends" key sweep would claim
+    assert cb.detect_kind(cur) == "search"
+    rows, regressions = cb.compare(base, cur, 1e-9, 0.5)
+    assert regressions == 0                   # wall-clock drift is perf-class
+    by = {r["metric"]: r for r in rows}
+    assert by["searched_le_greedy"]["status"] == "ok"
+    assert by["wall_s"]["status"] in ("ok", "drift")
+    # a hop ratio moving at all (seeded searches are bit-for-bit) regresses
+    drift = mk(0.84, 10.0)
+    rows, n = cb.compare(base, drift, 1e-9, 0.5)
+    assert n >= 1
+    assert {r["metric"]: r for r in rows}[
+        "networks.vgg11-cifar.hop_ratio"]["status"] == "REGRESSION"
+    # so does a flipped acceptance bool, and strict mode fails the run
+    bad = dict(mk(0.83, 10.0), searched_le_greedy=False)
+    assert cb.compare(base, bad, 1e-9, 0.5)[1] >= 1
+    with tempfile.TemporaryDirectory() as d:
+        pb, pc = os.path.join(d, "b.json"), os.path.join(d, "c.json")
+        json.dump(base, open(pb, "w")); json.dump(bad, open(pc, "w"))
+        assert cb.main([pc, "--baseline", pb, "--strict"]) == 1
+        json.dump(mk(0.83, 99.0), open(pc, "w"))
+        assert cb.main([pc, "--baseline", pb, "--strict"]) == 0
+
+
 def test_compare_bench_history_records_devices():
     cb = _load_compare_bench()
     payload = dict(n_scenarios=2, n_devices=8,

@@ -1,0 +1,316 @@
+"""repro.search: greedy-bitwise cost anchoring, legality validators, the
+searched<=greedy invariant (hypothesis over random small workloads), seeded
+reproducibility, and the compile_program(mapping=...) dispatch."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # stripped container: deterministic fallback
+    from _hypothesis_stub import given, settings, st
+
+from repro.core.arch import DEFAULT_ARCH
+from repro.core.executor import ProgramExecutor, random_weights
+from repro.core.mapping import NETWORKS, ConvSpec, FCSpec, greedy_place
+from repro.core.program import Workload, compile_program
+from repro.core.simulator import EVENT_FIELDS, DominoModel
+from repro.search import (
+    ENGINES,
+    MappingCandidate,
+    PopulationEvaluator,
+    anneal_search,
+    candidate_allocs,
+    evolve_search,
+    greedy_candidate,
+    mapping_cost,
+    search_mapping,
+)
+from repro.search.space import (
+    candidate_n_chips,
+    validate_alloc,
+    validate_allocs,
+    validate_blocks,
+    validate_candidate,
+)
+
+# a small arch so tiny layers still split into multiple blocks and chips
+SMALL_ARCH = DEFAULT_ARCH.replace(n_c=16, n_m=16, tiles_per_chip=12)
+
+
+def tiny_workload(seed: int) -> Workload:
+    """Random 2–4 layer conv/FC stack, sized for the 16x16 SMALL_ARCH."""
+    rng = np.random.default_rng(seed)
+    c = int(rng.integers(3, 9))
+    layers = []
+    h = 8
+    for i in range(int(rng.integers(1, 4))):
+        c_out = int(rng.integers(4, 33))
+        layers.append(ConvSpec(f"c{i}", 3, c, c_out, h, h,
+                               pool_k=2 if rng.random() < 0.3 else 0))
+        c, h = c_out, layers[-1].h_out // (2 if layers[-1].pool_k else 1)
+    layers.append(FCSpec("fc", c * h * h, int(rng.integers(4, 40))))
+    return Workload(f"tiny{seed}", tuple(layers))
+
+
+# ---------------------------------------------------------------------------
+# greedy anchoring: the cost model's greedy score IS the committed baseline
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("network", sorted(NETWORKS))
+def test_greedy_candidate_is_greedy_place_bitwise(network):
+    wl = NETWORKS[network]()
+    arch = DEFAULT_ARCH
+    cand = greedy_candidate(wl.layers, arch)
+    allocs, _ = candidate_allocs(wl.layers, arch, cand)
+    program = compile_program(wl, arch)
+    assert list(allocs) == list(program.allocs)
+    # and the greedy cost's base components equal the committed compile
+    # artifacts with ==, not allclose
+    cost = mapping_cost(wl.layers, arch, cand)
+    tot = program.event_totals
+    model = DominoModel(program)
+    link = (tot["ps_bits"] + tot["ifm_bits"]) \
+        * arch.energy.link_pj_per_bit * arch.energy_scale()
+    assert cost.link_pj == link
+    assert cost.offchip_pj == model.offchip_energy_img_j() * 1e12
+    assert cost.steady_cycles == model.bottleneck_px()
+    assert cost.n_tiles == program.n_tiles
+    assert cost.n_chips == program.n_chips
+
+
+def test_compile_program_greedy_default_unchanged():
+    wl = NETWORKS["vgg11-cifar"]()
+    assert compile_program(wl) is compile_program(wl, mapping="greedy")
+
+
+# ---------------------------------------------------------------------------
+# legality validators (the rules greedy_place now asserts on its own output)
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_place_output_validates():
+    wl = NETWORKS["vgg11-cifar"]()
+    validate_allocs(greedy_place(list(wl.layers), DEFAULT_ARCH), DEFAULT_ARCH)
+
+
+def test_validate_alloc_rejects_capacity_overflow():
+    allocs = greedy_place(list(NETWORKS["vgg11-cifar"]().layers), DEFAULT_ARCH)
+    a = allocs[0]
+    bad = type(a)(layer=a.layer, n_tiles=a.n_tiles, grid=a.grid,
+                  chip_ids=a.chip_ids, crosses_chip=a.crosses_chip)
+    tiny = DEFAULT_ARCH.replace(tiles_per_chip=4)
+    with pytest.raises(ValueError, match="capacity overflow"):
+        validate_alloc(bad, tiny)
+    wrong_grid = type(a)(layer=a.layer, n_tiles=a.n_tiles + 1, grid=a.grid,
+                         chip_ids=a.chip_ids)
+    with pytest.raises(ValueError, match="grid product"):
+        validate_alloc(wrong_grid, DEFAULT_ARCH)
+    no_chips = type(a)(layer=a.layer, n_tiles=a.n_tiles, grid=a.grid,
+                       chip_ids=())
+    with pytest.raises(ValueError, match="chip_ids is empty"):
+        validate_alloc(no_chips, DEFAULT_ARCH)
+
+
+def test_validate_allocs_rejects_overlap_and_chip_mismatch():
+    allocs = greedy_place(list(NETWORKS["vgg11-cifar"]().layers), DEFAULT_ARCH)
+    starts, pos = [], 0
+    for a in allocs:
+        starts.append(pos)
+        pos += a.n_tiles
+    # pull layer 1 back onto layer 0's span -> overlap
+    bad = list(starts)
+    bad[1] = starts[0]
+    with pytest.raises(ValueError, match="overlapping placement"):
+        validate_allocs(allocs, DEFAULT_ARCH, bad)
+    # shift a span so its recorded chip ids no longer match its extent
+    shifted = list(starts)
+    shifted[-1] += DEFAULT_ARCH.tiles_per_chip
+    with pytest.raises(ValueError, match="chip_ids"):
+        validate_allocs(allocs, DEFAULT_ARCH, shifted)
+
+
+def test_validate_blocks_rejects_gap_and_overlap():
+    layer = ConvSpec("c", 3, 32, 16, 8, 8)
+    ok_c = [(0, 16), (16, 32)]
+    ok_m = [(0, 16)]
+    validate_blocks(layer, 16, 16, ok_c, ok_m)
+    with pytest.raises(ValueError, match="gap"):
+        validate_blocks(layer, 16, 16, [(0, 16), (17, 32)], ok_m)
+    with pytest.raises(ValueError, match="overlap"):
+        validate_blocks(layer, 16, 16, [(0, 16), (15, 32)], ok_m)
+    with pytest.raises(ValueError, match="cover"):
+        validate_blocks(layer, 16, 16, [(0, 16), (16, 30)], ok_m)
+
+
+def test_validate_candidate_rejects_bad_fields():
+    wl = tiny_workload(0)
+    g = greedy_candidate(wl.layers, SMALL_ARCH)
+    repl = lambda **kw: MappingCandidate(**{  # noqa: E731
+        "gaps": g.gaps, "block_c": g.block_c, "block_m": g.block_m,
+        "order": g.order, "egress_rot": g.egress_rot, **kw})
+    validate_candidate(wl.layers, SMALL_ARCH, g)
+    with pytest.raises(ValueError, match="negative gap"):
+        validate_candidate(wl.layers, SMALL_ARCH,
+                           repl(gaps=(-1,) + g.gaps[1:]))
+    with pytest.raises(ValueError, match="block_c"):
+        validate_candidate(wl.layers, SMALL_ARCH,
+                           repl(block_c=(SMALL_ARCH.n_c + 1,) + g.block_c[1:]))
+    with pytest.raises(ValueError, match="unknown order"):
+        validate_candidate(wl.layers, SMALL_ARCH,
+                           repl(order=("spiral",) + g.order[1:]))
+    with pytest.raises(ValueError, match="egress_rot"):
+        validate_candidate(wl.layers, SMALL_ARCH,
+                           repl(egress_rot=(99,) + g.egress_rot[1:]))
+    with pytest.raises(ValueError, match="entries for"):
+        validate_candidate(wl.layers, SMALL_ARCH, repl(gaps=g.gaps + (0,)))
+    with pytest.raises(ValueError, match="chips"):
+        validate_candidate(wl.layers, SMALL_ARCH, g, max_chips=0)
+
+
+# ---------------------------------------------------------------------------
+# the transit mechanism: chain layout zeroes intra-chain handoff hops
+# ---------------------------------------------------------------------------
+
+
+def test_chain_order_zeroes_single_chip_transit():
+    layers = (ConvSpec("solo", 3, 32, 32, 8, 8),)
+    arch = DEFAULT_ARCH.replace(n_c=8, n_m=8, tiles_per_chip=400)
+    g = greedy_candidate(layers, arch)
+    assert g.order == ("block",)
+    block_cost = mapping_cost(layers, arch, g)
+    chain = MappingCandidate(gaps=g.gaps, block_c=g.block_c,
+                             block_m=g.block_m, order=("chain",),
+                             egress_rot=g.egress_rot)
+    chain_cost = mapping_cost(layers, arch, chain)
+    assert block_cost.transit_pj > 0
+    assert chain_cost.transit_pj == 0.0
+    # base (closed-form) components are layout-independent
+    assert chain_cost.base_pj == block_cost.base_pj
+
+
+# ---------------------------------------------------------------------------
+# property tests: searched <= greedy, legality of every emitted candidate,
+# seeded bit-for-bit reproducibility
+# ---------------------------------------------------------------------------
+
+
+class RecordingEvaluator(PopulationEvaluator):
+    """Validates every candidate an engine emits before scoring it."""
+
+    def __init__(self, layers, arch):
+        super().__init__(layers, arch, backend="numpy")
+        self.max_chips = candidate_n_chips(
+            layers, arch, greedy_candidate(layers, arch))
+        self.n_seen = 0
+
+    def costs(self, cands):
+        for c in cands:
+            validate_candidate(self.layers, self.arch, c, self.max_chips)
+        self.n_seen += len(cands)
+        return super().costs(cands)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**16), engine=st.sampled_from(sorted(ENGINES)))
+def test_searched_never_worse_than_greedy(seed, engine):
+    wl = tiny_workload(seed % 7)
+    ev = RecordingEvaluator(wl.layers, SMALL_ARCH)
+    res = ENGINES[engine](wl.layers, SMALL_ARCH, budget=16, seed=seed,
+                          evaluator=ev)
+    assert res.cost.objective <= res.greedy_cost.objective
+    assert res.cost.hop_energy_pj <= res.greedy_cost.hop_energy_pj
+    assert res.evaluations <= 16
+    assert ev.n_seen == res.evaluations
+    # the winning candidate is itself legal and within the greedy chip fleet
+    validate_candidate(wl.layers, SMALL_ARCH, res.candidate, ev.max_chips)
+
+
+@pytest.mark.parametrize("engine_fn", [anneal_search, evolve_search])
+def test_fixed_seed_reproduces_mapping_bitwise(engine_fn):
+    wl = tiny_workload(3)
+    runs = [engine_fn(wl.layers, SMALL_ARCH, budget=24, seed=11,
+                      evaluator=PopulationEvaluator(
+                          wl.layers, SMALL_ARCH, backend="numpy"))
+            for _ in range(2)]
+    assert runs[0].candidate == runs[1].candidate
+    assert runs[0].cost.objective == runs[1].cost.objective
+    assert runs[0].history == runs[1].history
+
+
+def test_search_mapping_memoizes_and_validates_args():
+    wl = NETWORKS["vgg11-cifar"]()
+    r1 = search_mapping(wl, DEFAULT_ARCH, budget=8, seed=0, backend="numpy")
+    r2 = search_mapping(wl, DEFAULT_ARCH, budget=8, seed=0, backend="numpy")
+    assert r1 is r2  # lru-cached on (workload, arch, budget, engine, seed)
+    with pytest.raises(ValueError, match="budget"):
+        search_mapping(wl, budget=0)
+    with pytest.raises(ValueError, match="unknown search engine"):
+        search_mapping(wl, budget=4, engine="bogus")
+
+
+# ---------------------------------------------------------------------------
+# compile_program dispatch + searched programs execute image->logits
+# ---------------------------------------------------------------------------
+
+
+def test_compile_program_mapping_dispatch_errors():
+    wl = tiny_workload(0)
+    with pytest.raises(ValueError, match="mapping"):
+        compile_program(wl, SMALL_ARCH, mapping="bogus")
+    with pytest.raises(ValueError, match="mapping"):
+        compile_program(wl, SMALL_ARCH, mapping=object())
+
+
+def test_searched_program_compiles_and_executes():
+    wl = tiny_workload(0)
+    g = greedy_candidate(wl.layers, SMALL_ARCH)
+    # force custom blocking (halve the c axis of the widest layer) so the
+    # searched compile path exercises non-default block ranges
+    bc = list(g.block_c)
+    i = max(range(len(bc)), key=lambda j: wl.layers[j].c_in)
+    bc[i] = max(1, bc[i] // 2)
+    cand = MappingCandidate(gaps=g.gaps, block_c=tuple(bc),
+                            block_m=g.block_m, order=g.order,
+                            egress_rot=g.egress_rot)
+    prog_g = compile_program(wl, SMALL_ARCH)
+    prog_s = compile_program(wl, SMALL_ARCH, mapping=cand)
+    assert prog_s.mapping == "searched"
+    assert prog_s.candidate == cand
+    allocs, _ = candidate_allocs(wl.layers, SMALL_ARCH, cand)
+    assert list(prog_s.allocs) == list(allocs)
+    assert prog_s.n_tiles > prog_g.n_tiles  # halved blocks -> more tiles
+
+    weights = random_weights(prog_g, seed=0)
+    imgs = np.random.default_rng(1).normal(
+        size=(2,) + ProgramExecutor(prog_g, weights).input_shape)
+    ref = ProgramExecutor(prog_g, weights, backend="numpy")
+    alt = ProgramExecutor(prog_s, weights, backend="numpy")
+    got_ref, got_alt = ref.run(imgs), alt.run(imgs)
+    # different blocking reorders float64 sums only
+    np.testing.assert_allclose(np.asarray(got_alt.outputs),
+                               np.asarray(got_ref.outputs),
+                               rtol=1e-9, atol=1e-12)
+    # executor-counted events == the program's closed-form totals, custom
+    # blocking included
+    alt.run(imgs[:1])
+    assert all(alt.events[f] == prog_s.event_totals[f] for f in EVENT_FIELDS)
+
+
+def test_compile_program_searched_string_uses_search_mapping():
+    wl = tiny_workload(2)
+    prog = compile_program(wl, SMALL_ARCH, mapping="searched")
+    assert prog.mapping == "searched"
+    res = search_mapping(wl, SMALL_ARCH)
+    assert prog.candidate == res.candidate
+    # and the searched program costs no more hop energy than greedy
+    assert res.cost.hop_energy_pj <= res.greedy_cost.hop_energy_pj
+
+
+def test_cache_stats_reports_search_caches():
+    import repro.core as core
+    import repro.search  # noqa: F401  (registers the search_mapping cache)
+
+    stats = core.cache_stats()
+    assert "compile_candidate" in stats
+    assert "search_mapping" in stats

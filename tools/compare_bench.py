@@ -1,7 +1,8 @@
 """Benchmark-artifact regression differ (the CI compare step).
 
 Diffs a freshly produced sweep (`benchmarks/sweep.py`), serve
-(`benchmarks/serve_bench.py`), or executor (`benchmarks/executor_bench.py`)
+(`benchmarks/serve_bench.py`), executor (`benchmarks/executor_bench.py`),
+or mapping-search (`benchmarks/search_bench.py`)
 JSON artifact against a committed baseline in ``benchmarks/baselines/`` and
 emits a GitHub-flavored markdown table — pipe it into
 ``$GITHUB_STEP_SUMMARY`` to surface drift on every run (ROADMAP: "compare
@@ -95,14 +96,38 @@ EXECUTOR_METRICS: List[Tuple[str, str]] = [
     ("batches.8.jax_vs_per_image_speedup", "perf"),
 ]
 
+# search artifact (benchmarks/search_bench.py): everything but wall-clock
+# is fidelity — searches are seeded and scored in deterministic NumPy
+# float64, so hop-energy ratios reproduce bit-for-bit across runners. The
+# searched_le_greedy gate is THE acceptance bool: a searched mapping may
+# never score worse than the committed greedy baseline, and
+# greedy_matches_baseline pins the cost model's greedy score bitwise to
+# the committed compile artifacts.
+SEARCH_METRICS: List[Tuple[str, str]] = [
+    ("searched_le_greedy", "fidelity"),
+    ("strictly_better_any", "fidelity"),
+    ("greedy_matches_baseline", "fidelity"),
+    ("energy_ratio_mean", "fidelity"),
+    ("networks.vgg11-cifar.hop_ratio", "fidelity"),
+    ("networks.vgg16-imagenet.hop_ratio", "fidelity"),
+    ("networks.vgg19-imagenet.hop_ratio", "fidelity"),
+    ("networks.resnet18-cifar.hop_ratio", "fidelity"),
+    ("pareto.n_points", "fidelity"),
+    ("pareto.n_front", "fidelity"),
+    ("wall_s", "perf"),
+]
+
 METRICS_BY_KIND: Dict[str, List[Tuple[str, str]]] = {
     "sweep": SWEEP_METRICS,
     "serve": SERVE_METRICS,
     "executor": EXECUTOR_METRICS,
+    "search": SEARCH_METRICS,
 }
 
 
 def detect_kind(payload: Dict) -> str:
+    if "searched_le_greedy" in payload:
+        return "search"
     if "batches" in payload and "events_match" in payload:
         return "executor"
     if "columns" in payload or "backends" in payload:
@@ -110,7 +135,8 @@ def detect_kind(payload: Dict) -> str:
     if "tokens_s" in payload:
         return "serve"
     raise SystemExit(
-        "compare_bench: unrecognized artifact (not sweep/serve/executor)")
+        "compare_bench: unrecognized artifact (not sweep/serve/executor/"
+        "search)")
 
 
 def extract(payload: Dict, path: str) -> Optional[float]:
