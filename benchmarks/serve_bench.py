@@ -17,9 +17,21 @@ per-request oracle loop (``Engine.generate_sequential``) and asserts greedy
 token-identity — the same contract tests/test_serve.py enforces — and
 records the oracle's decode-step count for comparison.
 
+``--traffic <profile.json>`` switches to the serving-tier benchmark: a
+validated :class:`repro.serve.traffic.TrafficProfile` drives the engine
+through ``Engine.serve`` (admission queue + virtual clock) and the payload
+gains the latency-tier metrics CI trends — ``latency_p50/p99_ticks``,
+``ttft_p50/p99_ticks``, ``goodput_tokens_per_tick`` — all denominated in
+deterministic virtual ticks (1 tick = one pooled decode step), plus the
+oracle-parity boolean. ``--page-size/--pool-pages`` serve it through the
+paged KV cache.
+
     PYTHONPATH=src python benchmarks/serve_bench.py --out serve-bench.json
     PYTHONPATH=src python benchmarks/serve_bench.py --batch 8 --requests 32 \
         --max-new 16 --no-check
+    PYTHONPATH=src python benchmarks/serve_bench.py \
+        --traffic examples/traffic_steady.json --page-size 8 \
+        --out serve-traffic.json
 """
 from __future__ import annotations
 
@@ -46,6 +58,62 @@ def make_requests(n: int, prompt_len: int, max_new: int, temperature: float,
     ]
 
 
+def traffic_main(args, cfg, model, params) -> int:
+    """The --traffic serving-tier benchmark: profile-driven Engine.serve."""
+    from repro.serve.engine import Engine
+    from repro.serve.traffic import TrafficProfile, simulate
+
+    profile = TrafficProfile.from_json(args.traffic)
+    max_seq = args.max_seq or profile.max_rows
+    if profile.max_rows > max_seq:
+        raise SystemExit(
+            f"profile {profile.name!r} can draw requests needing "
+            f"{profile.max_rows} cache rows but --max-seq={max_seq}"
+        )
+    eng = Engine(model, params, batch=args.batch, max_seq=max_seq,
+                 page_size=args.page_size, pool_pages=args.pool_pages)
+
+    # untimed warmup absorbs prefill/decode/gather/scatter jit compilation;
+    # deterministic fields are identical across runs by construction
+    simulate(eng, profile, policy=args.policy, check=False)
+    payload = None
+    for _ in range(max(args.repeats, 1)):
+        p = simulate(eng, profile, policy=args.policy, check=False)
+        if payload is None or p["wall_s"] < payload["wall_s"]:
+            payload = p
+    if args.check:
+        chk = simulate(eng, profile, policy=args.policy, check=True)
+        payload["matches_sequential"] = chk["matches_sequential"]
+        if profile.temperature <= 0 and not payload["matches_sequential"]:
+            raise AssertionError(
+                "greedy traffic-driven serving diverged from the "
+                "sequential oracle"
+            )
+    payload = dict(arch=args.arch, batch=args.batch, max_seq=max_seq,
+                   **payload)
+
+    print(
+        f"traffic {profile.name!r}: {payload['n_accepted']}/"
+        f"{payload['n_requests']} served at batch={args.batch} "
+        f"({args.policy}), p50/p99 latency "
+        f"{payload['latency_p50_ticks']:.1f}/"
+        f"{payload['latency_p99_ticks']:.1f} ticks, p50/p99 TTFT "
+        f"{payload['ttft_p50_ticks']:.1f}/{payload['ttft_p99_ticks']:.1f}, "
+        f"goodput {payload['goodput_tokens_per_tick']:.2f} tok/tick, "
+        f"{payload['tokens_s']:.1f} tok/s",
+        file=sys.stderr,
+    )
+
+    text = json.dumps(payload, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text)
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="smollm-135m",
@@ -69,6 +137,17 @@ def main(argv=None) -> int:
                     help="skip the sequential-oracle token-identity check")
     ap.add_argument("--out", default=None,
                     help="write JSON here (default: stdout)")
+    ap.add_argument("--traffic", default=None, metavar="PROFILE.json",
+                    help="serving-tier mode: drive Engine.serve with this "
+                         "TrafficProfile (emits latency/TTFT/goodput)")
+    ap.add_argument("--policy", default="fifo", choices=("fifo", "latency"),
+                    help="admission policy for --traffic (default fifo)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="serve through the paged KV cache with this page "
+                         "size (rows per page)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="shared page-pool size (default: the contiguous "
+                         "footprint, batch * ceil(max_seq/page_size))")
     args = ap.parse_args(argv)
 
     import jax
@@ -80,8 +159,13 @@ def main(argv=None) -> int:
     cfg = get_config(args.arch).reduced()
     model = build_model(cfg, CallConfig(remat="none"))
     params = model.init(jax.random.PRNGKey(0))
+
+    if args.traffic is not None:
+        return traffic_main(args, cfg, model, params)
+
     max_seq = args.max_seq or args.prompt_len + args.max_new
-    eng = Engine(model, params, batch=args.batch, max_seq=max_seq)
+    eng = Engine(model, params, batch=args.batch, max_seq=max_seq,
+                 page_size=args.page_size, pool_pages=args.pool_pages)
 
     wave = lambda: make_requests(
         args.requests, args.prompt_len, args.max_new, args.temperature,

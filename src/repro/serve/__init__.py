@@ -1,17 +1,59 @@
 """Continuous-batching LLM serving (docs/serving.md).
 
 ``Engine`` serves request waves through a fixed pool of decode slots —
-one jitted ``decode_step`` per token advances every active slot —
-backed by ``SlotCache``, the slot-indexed preallocated KV cache.
+one jitted ``decode_step`` per token advances every active slot — backed
+by ``SlotCache`` (slot-indexed preallocated KV) or ``PagedSlotCache``
+(fixed-size pages from a shared pool behind a slot→page table). The
+streaming front door is ``Engine.serve`` over an ``AdmissionQueue``
+(FIFO / latency-aware policies, admission-time rejection, virtual clock);
+``TrafficProfile`` + ``simulate`` drive it with validated synthetic
+workloads and emit latency/TTFT/goodput metrics.
 """
+from repro.serve.admission import (
+    AdmissionQueue,
+    Arrival,
+    Rejection,
+    VirtualClock,
+    iter_async,
+)
 from repro.serve.engine import Engine, Request
-from repro.serve.kvcache import SlotCache, cache_bytes, init_slots, trim_report
+from repro.serve.kvcache import (
+    OutOfPages,
+    PagedSlotCache,
+    PagePool,
+    SlotCache,
+    cache_bytes,
+    init_paged_slots,
+    init_slots,
+    seq_axes,
+    trim_report,
+)
+from repro.serve.traffic import (
+    LengthMix,
+    TrafficProfile,
+    generate_arrivals,
+    simulate,
+)
 
 __all__ = [
+    "AdmissionQueue",
+    "Arrival",
     "Engine",
+    "LengthMix",
+    "OutOfPages",
+    "PagePool",
+    "PagedSlotCache",
+    "Rejection",
     "Request",
     "SlotCache",
+    "TrafficProfile",
+    "VirtualClock",
     "cache_bytes",
+    "generate_arrivals",
+    "init_paged_slots",
     "init_slots",
+    "iter_async",
+    "seq_axes",
+    "simulate",
     "trim_report",
 ]

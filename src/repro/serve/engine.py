@@ -1,17 +1,45 @@
 """Continuous-batching serving engine: one jitted decode step per token.
 
 A fixed pool of ``batch`` decode *slots* backed by one preallocated shared
-KV cache (:class:`repro.serve.kvcache.SlotCache`). Every generated token
-costs exactly one jitted ``model.decode_step`` call that advances **all**
-active slots at once — per-slot sequence offsets ride in a ``(batch,)``
-position vector, idle slots are parked at ``pos = max_seq`` (their KV
-writes are masked out and their sampled outputs discarded; recurrent
-SSM/hybrid state may still advance on parked rows, but admission's
-``write_prefill`` fully overwrites a slot before reuse, so nothing a
-parked row computes ever reaches a request), and sampling is vectorized
-over the pool with per-slot fold-in keys. Finished sequences (EOS or length) retire between steps and
-their slots are refilled from the pending queue: refill = prefill of the
+KV cache (:class:`repro.serve.kvcache.SlotCache`, or the paged
+:class:`repro.serve.kvcache.PagedSlotCache` when the engine is built with
+``page_size=``). Every generated token costs exactly one jitted
+``model.decode_step`` call that advances **all** active slots at once —
+per-slot sequence offsets ride in a ``(batch,)`` position vector, idle
+slots are parked at ``pos = max_seq`` (their KV writes are masked out and
+their sampled outputs discarded; recurrent SSM/hybrid state may still
+advance on parked rows, but admission's ``write_prefill`` fully overwrites
+a slot before reuse, so nothing a parked row computes ever reaches a
+request), and sampling is vectorized over the pool with per-slot fold-in
+keys. Finished sequences (EOS or length) retire between steps and their
+slots are refilled through the admission layer
+(:class:`repro.serve.admission.AdmissionQueue`): refill = prefill of the
 incoming prompt into the freed slot's cache rows.
+
+Two front doors share one serve loop:
+
+* :meth:`Engine.generate` — the legacy batch API: a materialized request
+  list, validated up front (raises on any invalid request), admitted FIFO
+  as if everything arrived at t=0. Byte-for-byte the same admissions,
+  decode steps, and stats as the pre-admission-layer engine.
+* :meth:`Engine.serve` — the streaming API: an
+  :class:`~repro.serve.admission.AdmissionQueue` over a time-sorted
+  arrival stream (e.g. from :mod:`repro.serve.traffic`). A virtual clock
+  ticks once per decode step; invalid or over-capacity requests are
+  *rejected at admission time* (never raising mid-stream), and per-request
+  arrival/admission/finish times are stamped for latency/TTFT accounting.
+
+Paged mode (``page_size=``): KV rows live in fixed-size pages from a
+shared pool with a slot→page indirection table. Admission is
+*reservation-based* — a request is only admitted when the pool can commit
+its worst case ``ceil((prompt + max_new_tokens - 1) / page_size)`` pages,
+so :class:`~repro.serve.kvcache.OutOfPages` is unreachable mid-decode;
+pages are still allocated lazily (a slot holds only
+``ceil(written_rows / page_size)`` pages at any step) and returned to the
+free list at retirement. The decode step gathers the dense cache view
+through the page table, runs the *same* jitted step as the contiguous
+path, and scatters back — bitwise-identical logits (asserted by
+tests/test_kvcache_paged.py).
 
 Determinism contract (asserted by tests/test_serve.py):
 
@@ -22,7 +50,10 @@ Determinism contract (asserted by tests/test_serve.py):
   *chained* fold ``key = fold_in(key, t)`` at each local decode step ``t``
   (so step 1 samples with ``fold_in(fold_in(key, 0), 1)``, not
   ``fold_in(key, 1)``) — sampled outputs are seed-deterministic and
-  independent of slot assignment/batch layout.
+  independent of slot assignment/batch layout/arrival pattern. The
+  ``request_index`` is the *arrival index* assigned by the admission
+  queue, so the oracle replays a traffic run via
+  ``generate_sequential(reqs, indices=arrival_indices)``.
 
 Families with ``(B, 1)`` decode tokens are supported (dense / hybrid /
 ssm; moe only with expert capacity that is drop-free at the pool size —
@@ -35,15 +66,15 @@ docs/serving.md). Not servable here: multi-codebook audio needs ``(B, 1, K)`` to
 """
 from __future__ import annotations
 
-from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.kvcache import init_slots
+from repro.serve.admission import AdmissionQueue
+from repro.serve.kvcache import init_paged_slots, init_slots
 
 PyTree = Any
 
@@ -55,6 +86,12 @@ class Request:
     temperature: float = 0.0
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    # --- serving-tier accounting (virtual-clock ticks) ---
+    arrival_time: float = 0.0
+    admitted_time: Optional[float] = None   # = first-token time (prefill)
+    finish_time: Optional[float] = None
+    rejected: Optional[str] = None          # admission-rejection reason
+    pages_peak: Optional[int] = None        # paged mode: max pages held
 
 
 @dataclass
@@ -63,27 +100,52 @@ class _SlotState:
 
     req: Request
     produced: int  # tokens emitted so far (incl. the prefill-sampled one)
+    index: int = 0       # arrival index (PRNG fold-in identity)
+    reserved: int = 0    # paged mode: worst-case pages committed
 
 
 class Engine:
     """Continuous-batching engine over the model facade.
 
     ``batch`` is the slot-pool size (decode batch), ``max_seq`` the shared
-    per-slot cache capacity (prompt + generated tokens must fit). After
-    :meth:`generate`, ``last_stats`` holds the throughput counters the
-    serve benchmark publishes (decode steps, generated tokens, occupancy).
+    per-slot cache capacity (prompt + generated tokens must fit). With
+    ``page_size=`` the KV cache is paged: slots draw fixed-size pages from
+    a shared pool of ``pool_pages`` (default ``batch *
+    ceil(max_seq/page_size)``, i.e. the contiguous footprint — pass fewer
+    to actually save memory on short-sequence traffic). After
+    :meth:`generate` / :meth:`serve`, ``last_stats`` holds the throughput
+    counters the serve benchmark publishes (decode steps, generated
+    tokens, occupancy).
     """
 
-    def __init__(self, model, params, *, batch: int, max_seq: int, eos_id: Optional[int] = None):
+    def __init__(self, model, params, *, batch: int, max_seq: int,
+                 eos_id: Optional[int] = None,
+                 page_size: Optional[int] = None,
+                 pool_pages: Optional[int] = None):
         if batch < 1:
             raise ValueError(f"batch (slot-pool size) must be >= 1, got {batch}")
         if max_seq < 1:
             raise ValueError(f"max_seq must be >= 1, got {max_seq}")
+        if page_size is not None and not (1 <= page_size <= max_seq):
+            raise ValueError(
+                f"page_size must be in [1, max_seq={max_seq}], got {page_size}"
+            )
+        if pool_pages is not None:
+            if page_size is None:
+                raise ValueError("pool_pages requires page_size")
+            pps = -(-max_seq // page_size)
+            if pool_pages < pps:
+                raise ValueError(
+                    f"pool_pages={pool_pages} cannot back even one full-length "
+                    f"slot ({pps} pages of {page_size} rows for max_seq={max_seq})"
+                )
         self.model = model
         self.params = params
         self.batch = batch
         self.max_seq = max_seq
         self.eos_id = eos_id
+        self.page_size = page_size
+        self.pool_pages = pool_pages
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill)
         self._step = jax.jit(
@@ -98,23 +160,41 @@ class Engine:
         self.last_stats: Dict[str, Any] = {}
 
     @property
+    def paged(self) -> bool:
+        return self.page_size is not None
+
+    @property
     def slots(self):
         """The engine's slot pool (allocated on first use)."""
         if self._slots is None:
-            self._slots = init_slots(self.model, self.batch, self.max_seq)
+            if self.paged:
+                self._slots = init_paged_slots(
+                    self.model, self.batch, self.max_seq, self.page_size,
+                    pool_pages=self.pool_pages,
+                )
+            else:
+                self._slots = init_slots(self.model, self.batch, self.max_seq)
         return self._slots
 
     def _validate(self, requests: List[Request]) -> None:
-        """Reject requests that cannot fit the slot cache up front: an
-        overflowing slot would silently drop KV writes at ``pos >= max_seq``
-        (the masked scatter) while the scalar oracle clamps them, breaking
-        the token-identity contract with a confusing divergence instead of
-        a clear capacity error."""
+        """Reject requests that cannot be served up front: an overflowing
+        slot would silently drop KV writes at ``pos >= max_seq`` (the
+        masked scatter) while the scalar oracle clamps them, breaking the
+        token-identity contract with a confusing divergence instead of a
+        clear capacity error; a zero-budget request has nothing to
+        generate and would only waste a prefill."""
         for ri, req in enumerate(requests):
             if len(req.prompt) == 0:
                 raise ValueError(
                     f"request {ri} has an empty prompt; prefill needs at "
                     "least one token"
+                )
+            if req.max_new_tokens < 1:
+                raise ValueError(
+                    f"request {ri} has max_new_tokens="
+                    f"{req.max_new_tokens}; a request must budget at least "
+                    "one generated token (zero-budget requests are rejected "
+                    "up front rather than occupying a slot)"
                 )
             need = len(req.prompt) + req.max_new_tokens
             if need > self.max_seq:
@@ -124,53 +204,8 @@ class Engine:
                     f"{req.max_new_tokens}) but max_seq={self.max_seq}"
                 )
 
-    # -------------------- sampling --------------------
-    def _sample(self, logits: jnp.ndarray, temperature: float, key) -> int:
-        """Host-side single-request sampling (prefill + oracle loop)."""
-        logits = logits[0, -1]
-        if logits.ndim > 1:  # audio multi-codebook: take codebook 0
-            logits = logits[0]
-        if temperature <= 0:
-            return int(jnp.argmax(logits))
-        return int(jax.random.categorical(key, logits / temperature))
-
-    def _step_impl(self, params, cache, tok, pos, keys, steps, temps, do_sample):
-        """One jitted decode step for the whole slot pool.
-
-        tok/pos/steps: (B,) int32; keys: stacked per-slot PRNG keys;
-        temps: (B,) float32 (0 = greedy); do_sample: static bool — False
-        for all-greedy waves, compiling out the per-step key fold and the
-        discarded categorical (keys are unused when nothing samples).
-        Returns (next tok, cache, keys).
-        """
-        logits, cache = self.model.decode_step(params, tok[:, None], cache, pos)
-        logits = logits[:, 0]
-        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        if not do_sample:
-            return greedy, cache, keys
-        keys = jax.vmap(jax.random.fold_in)(keys, steps)
-        # guard the categorical branch against temp=0 rows (greedy rows
-        # select the argmax anyway); divide in the logits dtype so sampled
-        # rows bit-match the oracle's `logits / temperature`
-        safe = jnp.where(temps > 0, temps, 1.0).astype(logits.dtype)
-        sampled = jax.vmap(jax.random.categorical)(
-            keys, logits / safe[:, None]
-        ).astype(jnp.int32)
-        tok = jnp.where(temps > 0, sampled, greedy)
-        return tok, cache, keys
-
-    # -------------------- continuous batching --------------------
-    def generate(self, requests: List[Request], *, seed: int = 0) -> List[Request]:
-        """Serve ``requests`` through the slot pool; one jitted decode step
-        per token across all active slots. Mutates and returns ``requests``
-        (tokens in ``out_tokens``); fills ``self.last_stats``."""
-        if not requests:
-            self.last_stats = dict(
-                decode_steps=0, generated_tokens=0, prefills=0,
-                occupancy=0.0, admission_order=[], batch=self.batch,
-                n_requests=0,
-            )
-            return requests
+    def _family_guards(self) -> None:
+        """Families the batched slot pool cannot serve token-identically."""
         cfg = getattr(self.model, "cfg", None)
         if getattr(cfg, "num_codebooks", 0):
             raise ValueError(
@@ -209,12 +244,104 @@ class Engine:
                     f"drop-free capacity_factor (>= {ok_cf:.4g} for this "
                     "pool — see docs/serving.md)"
                 )
+
+    # -------------------- sampling --------------------
+    def _sample(self, logits: jnp.ndarray, temperature: float, key) -> int:
+        """Host-side single-request sampling (prefill + oracle loop)."""
+        logits = logits[0, -1]
+        if logits.ndim > 1:  # audio multi-codebook: take codebook 0
+            logits = logits[0]
+        if temperature <= 0:
+            return int(jnp.argmax(logits))
+        return int(jax.random.categorical(key, logits / temperature))
+
+    def _step_impl(self, params, cache, tok, pos, keys, steps, temps, do_sample):
+        """One jitted decode step for the whole slot pool.
+
+        tok/pos/steps: (B,) int32; keys: stacked per-slot PRNG keys;
+        temps: (B,) float32 (0 = greedy); do_sample: static bool — False
+        for all-greedy waves, compiling out the per-step key fold and the
+        discarded categorical (keys are unused when nothing samples).
+        Returns (next tok, cache, keys). The paged path feeds the gathered
+        dense cache view through this same trace, so contiguous and paged
+        serving share one compilation and one numerical path.
+        """
+        logits, cache = self.model.decode_step(params, tok[:, None], cache, pos)
+        logits = logits[:, 0]
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if not do_sample:
+            return greedy, cache, keys
+        keys = jax.vmap(jax.random.fold_in)(keys, steps)
+        # guard the categorical branch against temp=0 rows (greedy rows
+        # select the argmax anyway); divide in the logits dtype so sampled
+        # rows bit-match the oracle's `logits / temperature`
+        safe = jnp.where(temps > 0, temps, 1.0).astype(logits.dtype)
+        sampled = jax.vmap(jax.random.categorical)(
+            keys, logits / safe[:, None]
+        ).astype(jnp.int32)
+        tok = jnp.where(temps > 0, sampled, greedy)
+        return tok, cache, keys
+
+    # -------------------- front doors --------------------
+    def generate(self, requests: List[Request], *, seed: int = 0) -> List[Request]:
+        """Serve a materialized wave through the slot pool; one jitted
+        decode step per token across all active slots. Raises on any
+        invalid request (the batch API's contract — streaming admission
+        rejects instead, see :meth:`serve`). Mutates and returns
+        ``requests`` (tokens in ``out_tokens``); fills ``self.last_stats``
+        with the legacy counter set."""
+        if not requests:
+            self.last_stats = dict(
+                decode_steps=0, generated_tokens=0, prefills=0,
+                occupancy=0.0, admission_order=[], batch=self.batch,
+                n_requests=0,
+            )
+            return requests
+        self._family_guards()
         self._validate(requests)
+        do_sample = any(float(r.temperature) > 0 for r in requests)
+        queue = AdmissionQueue.from_requests(requests, max_seq=self.max_seq)
+        stats = self._serve_loop(queue, seed=seed, do_sample=do_sample)
+        assert not queue.rejected, "validated wave cannot be rejected"
+        self.last_stats = dict(
+            decode_steps=stats["decode_steps"],
+            generated_tokens=stats["generated_tokens"],
+            prefills=stats["prefills"],
+            occupancy=stats["occupancy"],
+            admission_order=stats["admission_order"],
+            batch=self.batch,
+            n_requests=len(requests),
+        )
+        return requests
+
+    def serve(self, queue: AdmissionQueue, *, seed: int = 0,
+              do_sample: bool = True, step_time: float = 1.0) -> List[Request]:
+        """Drive the slot pool from an admission queue over a (possibly
+        lazy) arrival stream. The queue's virtual clock advances
+        ``step_time`` per decode step and fast-forwards to the next
+        arrival whenever the pool drains. Invalid requests divert to
+        ``queue.rejected`` (with ``req.rejected`` set) instead of raising.
+
+        ``do_sample=False`` compiles out the sampling branch for known
+        all-greedy traffic; leaving it ``True`` is always correct (greedy
+        rows still select the argmax bit-exactly) but compiles the fold +
+        categorical. Returns the completed requests in finish order;
+        ``last_stats`` gains streaming fields (n_rejected,
+        makespan_ticks, ...) on top of the legacy counters."""
+        self._family_guards()
+        stats = self._serve_loop(queue, seed=seed, do_sample=do_sample,
+                                 step_time=step_time)
+        self.last_stats = stats
+        return stats.pop("_completed")
+
+    # -------------------- the shared serve loop --------------------
+    def _serve_loop(self, queue: AdmissionQueue, *, seed: int,
+                    do_sample: bool, step_time: float = 1.0) -> Dict[str, Any]:
         B = self.batch
         base_key = jax.random.PRNGKey(seed)
-        do_sample = any(float(r.temperature) > 0 for r in requests)
         slots = self.slots
-        pending = deque(enumerate(requests))
+        paged = self.paged
+        clock = queue.clock
         state: List[Optional[_SlotState]] = [None] * B
 
         tok = jnp.zeros((B,), jnp.int32)
@@ -222,20 +349,37 @@ class Engine:
         keys = jnp.stack([base_key] * B)
         steps = jnp.zeros((B,), jnp.int32)
         temps = jnp.zeros((B,), jnp.float32)
+        committed = 0  # paged: worst-case pages reserved by active slots
+        completed: List[Request] = []
         stats: Dict[str, Any] = dict(
             decode_steps=0, generated_tokens=0, prefills=0,
             occupancy_sum=0, admission_order=[], batch=B,
-            n_requests=len(requests),
         )
 
-        def admit(b: int) -> None:
-            """Refill slot ``b`` from the pending queue (prefill into the
+        def worst_pages(req: Request) -> int:
+            # the last decode step writes row prompt+max_new-2, so a
+            # non-EOS request touches prompt+max_new-1 rows at most
+            return slots.pages_needed(len(req.prompt) + req.max_new_tokens - 1)
+
+        def admit(b: int) -> bool:
+            """Refill slot ``b`` from the admission queue (prefill into the
             freed slot's cache rows). Requests finishing at prefill (EOS or
-            max_new_tokens<=1) complete without ever occupying the slot."""
-            nonlocal tok, pos, keys, steps, temps
-            while pending:
-                ri, req = pending.popleft()
+            max_new_tokens<=1) complete without ever occupying the slot.
+            Returns False when paged admission stalls: the pool cannot
+            commit the next request's worst case, so admission pauses (the
+            request is pushed back) until a retirement frees pages."""
+            nonlocal tok, pos, keys, steps, temps, committed
+            while True:
+                item = queue.pop()
+                if item is None:
+                    return True
+                ri, req = item
+                need = worst_pages(req) if paged else 0
+                if paged and committed + need > slots.allocator.n_pages:
+                    queue.push_back(ri, req)
+                    return False
                 stats["admission_order"].append(ri)
+                req.admitted_time = clock.now
                 prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
                 # the pristine template is immutable (non-donating jit), so
                 # admission reuses it instead of allocating a fresh cache
@@ -249,29 +393,64 @@ class Engine:
                     self.eos_id is not None and t0 == self.eos_id
                 ):
                     req.done = True
+                    req.finish_time = clock.now
+                    if paged:
+                        req.pages_peak = 0  # retired at prefill: no pages
+                    completed.append(req)
                     continue
+                if paged:
+                    committed += need
+                    slots.ensure_rows(b, prompt.shape[1])
+                    req.pages_peak = max(req.pages_peak or 0,
+                                         slots.pages_held(b))
                 slots.write_prefill(b, one)
-                state[b] = _SlotState(req=req, produced=1)
+                state[b] = _SlotState(req=req, produced=1, index=ri,
+                                      reserved=need)
                 tok = tok.at[b].set(t0)
                 pos = pos.at[b].set(prompt.shape[1])
                 keys = keys.at[b].set(key_r)
                 steps = steps.at[b].set(0)
                 temps = temps.at[b].set(float(req.temperature))
-                return
+                return True
 
         while True:
+            queue.poll(clock.now)
+            can_admit = True
             for b in range(B):
-                if state[b] is None and pending:
-                    admit(b)
+                if state[b] is None and can_admit:
+                    can_admit = admit(b)
             n_active = sum(1 for s in state if s is not None)
             if n_active == 0:
-                break
-            tok, slots.cache, keys = self._step(
-                self.params, slots.cache, tok, pos, keys, steps, temps,
-                do_sample,
-            )
+                if queue.exhausted:
+                    break
+                nxt = queue.next_arrival_time()
+                if nxt is None:  # ready but unadmittable cannot happen:
+                    break        # an empty pool always commits one request
+                clock.advance_to(max(nxt, clock.now))
+                continue
+            if paged:
+                # back the row this step writes (pos[b]) for every active
+                # slot; reservation admission guarantees the pool can
+                for b in range(B):
+                    st = state[b]
+                    if st is not None:
+                        slots.ensure_rows(b, len(st.req.prompt) + st.produced)
+                        st.req.pages_peak = max(st.req.pages_peak or 0,
+                                                slots.pages_held(b))
+                dense = slots.gather_dense()
+                tok, dense, keys = self._step(
+                    self.params, dense, tok, pos, keys, steps, temps,
+                    do_sample,
+                )
+                slots.scatter_dense(dense)
+            else:
+                tok, slots.cache, keys = self._step(
+                    self.params, slots.cache, tok, pos, keys, steps, temps,
+                    do_sample,
+                )
             stats["decode_steps"] += 1
             stats["occupancy_sum"] += n_active
+            clock.advance(step_time)
             steps = steps + 1
             pos = pos + 1
             toks_np = np.asarray(jax.device_get(tok))
@@ -287,7 +466,12 @@ class Engine:
                     self.eos_id is not None and t == self.eos_id
                 ):
                     st.req.done = True
+                    st.req.finish_time = clock.now
+                    completed.append(st.req)
                     state[b] = None
+                    if paged:
+                        slots.free_slot(b)
+                        committed -= st.reserved
                     # no reset needed: admission's write_prefill fully
                     # overwrites the slot before reuse, and a parked row's
                     # KV writes are dropped / outputs discarded
@@ -299,18 +483,34 @@ class Engine:
             if stats["decode_steps"] else 0.0
         )
         del stats["occupancy_sum"]
-        self.last_stats = stats
-        return requests
+        stats["n_requests"] = len(completed) + len(queue.rejected)
+        stats["n_accepted"] = len(completed)
+        stats["n_rejected"] = len(queue.rejected)
+        stats["makespan_ticks"] = clock.now
+        stats["_completed"] = completed
+        return stats
 
     # -------------------- per-request oracle --------------------
-    def generate_sequential(self, requests: List[Request], *, seed: int = 0) -> List[Request]:
+    def generate_sequential(self, requests: List[Request], *, seed: int = 0,
+                            indices: Optional[Iterable[int]] = None) -> List[Request]:
         """The pre-batching per-request loop, retained verbatim as the
         determinism oracle: one cache and one python decode loop per
         request. Greedy outputs of :meth:`generate` are asserted
-        token-identical to this path by the golden tests."""
+        token-identical to this path by the golden tests.
+
+        ``indices`` overrides the PRNG fold-in identity per request
+        (default: list position). A traffic run is replayed by passing the
+        arrival indices the admission queue assigned, so the oracle's key
+        chain matches the batched run even under rejections and
+        policy-reordered admission."""
         self._validate(requests)
         key = jax.random.PRNGKey(seed)
-        for ri, req in enumerate(requests):
+        idxs = list(indices) if indices is not None else list(range(len(requests)))
+        if len(idxs) != len(requests):
+            raise ValueError(
+                f"indices has {len(idxs)} entries for {len(requests)} requests"
+            )
+        for ri, req in zip(idxs, requests):
             cache = self.model.init_cache(1, self.max_seq)
             prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
             logits, cache = self._prefill(self.params, prompt, cache)

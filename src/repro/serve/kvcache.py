@@ -20,13 +20,26 @@ Slot lifecycle (all jitted, donated, in-place on the shared pytree):
   ``write_prefill`` fully overwrites a slot at admission).
 * :meth:`SlotCache.read_slot`      — extract one slot as a batch-1 pytree
   (test/introspection path; not used on the serving hot path).
+
+The **paged** variant (:class:`PagedSlotCache`) swaps the dense per-slot
+rows for fixed-size pages drawn from one shared pool, with a slot→page
+indirection table: a slot holds only ``ceil(rows_written / page_size)``
+pages instead of pinning ``max_seq`` rows up front, and pages return to
+the free list the moment a request retires. Reads route through a jitted
+gather over the page table (masked to the pristine template for
+unallocated pages, so a gathered dense view is **bitwise identical** to
+the contiguous cache); writes scatter back through the same table. Page
+accounting lives in :class:`PagePool`, a deterministic host-side free-list
+allocator whose invariants (no double allocation, conserved page count)
+are property-tested in ``tests/test_kvcache_paged.py``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PyTree = Any
 
@@ -136,3 +149,375 @@ def init_slots(model, batch: int, max_seq: int) -> SlotCache:
     """Allocate the serve engine's slot pool: one shared
     ``model.init_cache(batch, max_seq)`` pytree plus its slot-axis map."""
     return SlotCache(model, batch, max_seq)
+
+
+# ---------------------------------------------------------------------------
+# Paged slot cache: fixed-size pages from a shared pool + slot→page table
+# ---------------------------------------------------------------------------
+
+
+def seq_axes(model, s_a: int = 8, s_b: int = 16) -> PyTree:
+    """Per-leaf sequence-axis index of ``model.init_cache``'s pytree.
+
+    Discovered structurally like :func:`batch_axes`, by varying ``max_seq``
+    instead of ``batch`` under ``jax.eval_shape``: the one axis whose length
+    tracks ``max_seq`` is the KV sequence axis. Leaves whose shape is
+    independent of ``max_seq`` (SSM/hybrid recurrent state, VLM cross-attn
+    KV over a fixed image-token count) map to ``None`` — they have no rows
+    to page and stay dense per slot.
+    """
+    sa = jax.eval_shape(lambda: model.init_cache(1, s_a))
+    sb = jax.eval_shape(lambda: model.init_cache(1, s_b))
+
+    def axis(a, b):
+        cands = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if not cands:
+            return None
+        if len(cands) > 1:
+            raise ValueError(
+                f"ambiguous sequence axis for cache leaf {a.shape} vs {b.shape}"
+            )
+        return cands[0]
+
+    return jax.tree.map(axis, sa, sb)
+
+
+class OutOfPages(RuntimeError):
+    """The shared KV page pool has no free page for a required allocation."""
+
+
+class PagePool:
+    """Deterministic host-side free-list allocator over ``n_pages`` pages.
+
+    The free list is a LIFO stack seeded so the first allocations hand out
+    pages 0, 1, 2, … and a freed page is the next one reused — fully
+    deterministic, so paged serving replays bit-for-bit. Invariants
+    (property-tested): :meth:`alloc` never returns a page that is already
+    held, :meth:`free` rejects pages that are not held (double free), and
+    ``n_free + n_held == n_pages`` at every point in any alloc/free
+    sequence.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 1:
+            raise ValueError(f"page pool needs >= 1 page, got {n_pages}")
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._held: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_held(self) -> int:
+        return len(self._held)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise OutOfPages(
+                f"all {self.n_pages} KV pages are allocated; retire a "
+                "request or build the cache with more pool_pages"
+            )
+        page = self._free.pop()
+        if page in self._held:  # allocator corruption — never expected
+            raise AssertionError(f"free list handed out held page {page}")
+        self._held.add(page)
+        return page
+
+    def free(self, page: int) -> None:
+        if page not in self._held:
+            raise ValueError(
+                f"page {page} is not currently allocated (double free?)"
+            )
+        self._held.remove(page)
+        self._free.append(page)
+
+
+class PagedSlotCache:
+    """A paged drop-in for :class:`SlotCache`: KV rows live in fixed-size
+    pages drawn from one shared pool, and each slot maps to its pages
+    through an on-device indirection table.
+
+    * ``pool_pages`` (default ``batch * ceil(max_seq / page_size)``, i.e.
+      full provisioning) bounds the *resident* KV footprint: a slot
+      allocates pages lazily as rows are written, so short requests in a
+      long-``max_seq`` config never pin full-length rows, and with
+      ``pool_pages`` below full provisioning the pool is genuinely smaller
+      than the contiguous cache.
+    * ``gather_dense()`` materializes the transient dense
+      ``init_cache(batch, max_seq)`` view the decode step consumes — a
+      jitted ``take`` through the page table, with unallocated pages
+      masked to the pristine template, so the view is **bitwise identical**
+      to a contiguous :class:`SlotCache` holding the same writes.
+    * ``scatter_dense()`` writes a stepped dense view back into the pool
+      (rows in unallocated pages land in a trash page and are never read).
+
+    Only leaves whose sequence axis sits immediately after their slot axis
+    are paged (every KV layout in this repo); ``max_seq``-independent
+    leaves (recurrent state, cross-attn KV) stay dense per slot.
+    """
+
+    def __init__(self, model, batch: int, max_seq: int, page_size: int, *,
+                 pool_pages: Optional[int] = None):
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        if not 1 <= page_size <= max_seq:
+            raise ValueError(
+                f"page_size must be in [1, max_seq={max_seq}], got {page_size}"
+            )
+        self.batch = batch
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.pages_per_slot = -(-max_seq // page_size)
+        if pool_pages is None:
+            pool_pages = batch * self.pages_per_slot
+        if pool_pages < self.pages_per_slot:
+            raise ValueError(
+                f"pool_pages={pool_pages} cannot hold even one full slot "
+                f"({self.pages_per_slot} pages)"
+            )
+        self.pool_pages = pool_pages
+        self._trash = pool_pages  # scratch page for writes to unallocated rows
+
+        template = model.init_cache(1, max_seq)
+        self.template = template
+        shapes = jax.eval_shape(lambda: model.init_cache(1, max_seq))
+        b_tree = batch_axes(model, max_seq)
+        s_tree = seq_axes(model)
+        leaves, self._treedef = jax.tree.flatten(shapes)
+        # align per-leaf axis metadata by flatten order (axis trees hold
+        # None leaves, which pytrees drop — so walk shapes and probe)
+        self._b_ax = _flat_axes(shapes, b_tree)
+        self._s_ax = _flat_axes(shapes, s_tree)
+        self._paged: List[bool] = []
+        for shp, b_ax, s_ax in zip(leaves, self._b_ax, self._s_ax):
+            if s_ax is None or b_ax is None:
+                self._paged.append(False)
+                continue
+            if s_ax != b_ax + 1:
+                raise NotImplementedError(
+                    "paged cache needs the sequence axis immediately after "
+                    f"the slot axis; leaf {shp.shape} has batch axis {b_ax} "
+                    f"and sequence axis {s_ax}"
+                )
+            self._paged.append(True)
+        if not any(self._paged):
+            raise ValueError(
+                "model cache has no max_seq-scaling leaves to page; use the "
+                "contiguous SlotCache"
+            )
+        # bitwise contract: gather masks unallocated pages to the template
+        # value, which for pageable (KV) leaves must be the zero state
+        for leaf, paged in zip(jax.tree.leaves(template), self._paged):
+            if paged and np.any(np.asarray(leaf)):
+                raise ValueError(
+                    "pageable cache leaf has a nonzero template; the paged "
+                    "gather's unallocated-row masking assumes KV zeros"
+                )
+
+        def pool_leaf(leaf, b_ax, s_ax, paged):
+            if not paged:
+                if b_ax is None:
+                    return leaf  # slot-independent, shared
+                return jnp.repeat(leaf, batch, axis=b_ax)
+            shp = list(leaf.shape)
+            shp[b_ax] = pool_pages + 1  # + the trash page
+            shp[s_ax] = page_size
+            return jnp.zeros(tuple(shp), leaf.dtype)
+
+        self.pool = self._map(pool_leaf, template)
+        self._table_host = np.full(
+            (batch, self.pages_per_slot), self._trash, np.int32
+        )
+        self.table = jnp.asarray(self._table_host)
+        self.allocator = PagePool(pool_pages)
+        self._slot_pages: List[List[int]] = [[] for _ in range(batch)]
+
+        self._gather = jax.jit(self._gather_impl)
+        self._scatter = jax.jit(self._scatter_impl, donate_argnums=0)
+        self._write = jax.jit(self._write_impl, donate_argnums=0)
+
+    # -------------------- leaf-metadata plumbing --------------------
+    def _map(self, fn, tree: PyTree) -> PyTree:
+        """Map ``fn(leaf, b_ax, s_ax, paged)`` over a cache-structured tree."""
+        out = [
+            fn(leaf, b, s, p)
+            for leaf, b, s, p in zip(
+                jax.tree.leaves(tree), self._b_ax, self._s_ax, self._paged
+            )
+        ]
+        return jax.tree.unflatten(self._treedef, out)
+
+    # -------------------- jitted pool <-> dense views --------------------
+    def _row_mask(self, table: jnp.ndarray) -> jnp.ndarray:
+        """(batch, max_seq) bool: rows backed by an allocated page."""
+        valid = table != self._trash  # (B, P)
+        return jnp.repeat(valid, self.page_size, axis=1)[:, : self.max_seq]
+
+    def _gather_impl(self, pool: PyTree, table: jnp.ndarray) -> PyTree:
+        B, P, ps, S = self.batch, self.pages_per_slot, self.page_size, self.max_seq
+        flat = table.reshape(-1)
+        rows = self._row_mask(table)
+
+        def leaf(p, b_ax, s_ax, paged):
+            if not paged:
+                return p
+            g = jnp.take(p, flat, axis=b_ax)  # (..., B*P, ps, ...)
+            shp = g.shape
+            g = g.reshape(shp[:b_ax] + (B, P * ps) + shp[b_ax + 2:])
+            if P * ps != S:
+                g = jax.lax.slice_in_dim(g, 0, S, axis=b_ax + 1)
+            m = rows.reshape((1,) * b_ax + (B, S) + (1,) * (g.ndim - b_ax - 2))
+            return jnp.where(m, g, jnp.zeros((), g.dtype))
+
+        return self._map(leaf, pool)
+
+    def _scatter_impl(self, pool: PyTree, table: jnp.ndarray,
+                      dense: PyTree) -> PyTree:
+        B, P, ps, S = self.batch, self.pages_per_slot, self.page_size, self.max_seq
+        flat = table.reshape(-1)
+        dense_leaves = jax.tree.leaves(dense)
+
+        def leaf(i, p, b_ax, s_ax, paged):
+            d = dense_leaves[i]
+            if not paged:
+                return d.astype(p.dtype)  # stepped state replaces the pool's
+            if P * ps != S:
+                pad = [(0, 0)] * d.ndim
+                pad[s_ax] = (0, P * ps - S)
+                d = jnp.pad(d, pad)
+            shp = d.shape
+            d = d.reshape(shp[:b_ax] + (B * P, ps) + shp[b_ax + 2:])
+            idx = (slice(None),) * b_ax + (flat,)
+            return p.at[idx].set(d.astype(p.dtype))
+
+        out = [
+            leaf(i, p, b, s, pg)
+            for i, (p, b, s, pg) in enumerate(
+                zip(jax.tree.leaves(pool), self._b_ax, self._s_ax, self._paged)
+            )
+        ]
+        return jax.tree.unflatten(self._treedef, out)
+
+    def _write_impl(self, pool: PyTree, one: PyTree, page_ids: jnp.ndarray,
+                    slot: jnp.ndarray) -> PyTree:
+        """Install a batch-1 cache into one slot: paged leaves scatter page
+        chunks to ``page_ids`` (trash for unallocated chunks — a prefill's
+        rows beyond the prompt are template zeros anyway), dense leaves
+        ``dynamic_update_slice`` at ``slot`` exactly like SlotCache."""
+        P, ps, S = self.pages_per_slot, self.page_size, self.max_seq
+        one_leaves = jax.tree.leaves(one)
+
+        def leaf(i, p, b_ax, s_ax, paged):
+            o = one_leaves[i]
+            if not paged:
+                if b_ax is None:
+                    return p
+                return jax.lax.dynamic_update_slice_in_dim(
+                    p, o.astype(p.dtype), slot, axis=b_ax
+                )
+            if P * ps != S:
+                pad = [(0, 0)] * o.ndim
+                pad[s_ax] = (0, P * ps - S)
+                o = jnp.pad(o, pad)
+            shp = o.shape  # (..., 1, P*ps, ...) at (b_ax, s_ax)
+            o = o.reshape(shp[:b_ax] + (P, ps) + shp[b_ax + 2:])
+            idx = (slice(None),) * b_ax + (page_ids,)
+            return p.at[idx].set(o.astype(p.dtype))
+
+        out = [
+            leaf(i, p, b, s, pg)
+            for i, (p, b, s, pg) in enumerate(
+                zip(jax.tree.leaves(pool), self._b_ax, self._s_ax, self._paged)
+            )
+        ]
+        return jax.tree.unflatten(self._treedef, out)
+
+    # -------------------- host-side page accounting --------------------
+    def pages_needed(self, rows: int) -> int:
+        """Pages required to back ``rows`` cache rows."""
+        return -(-max(rows, 0) // self.page_size)
+
+    def pages_held(self, slot: int) -> int:
+        return len(self._slot_pages[slot])
+
+    def ensure_rows(self, slot: int, rows: int) -> int:
+        """Allocate pages so rows ``[0, rows)`` of ``slot`` are backed.
+
+        Returns the number of pages newly allocated. Raises
+        :class:`OutOfPages` when the pool is exhausted (the engine's
+        reservation-based admission makes this unreachable in serving).
+        """
+        if rows > self.max_seq:
+            raise ValueError(
+                f"slot {slot} needs {rows} rows but max_seq={self.max_seq}"
+            )
+        held = self._slot_pages[slot]
+        need = self.pages_needed(rows)
+        grew = 0
+        while len(held) < need:
+            page = self.allocator.alloc()
+            self._table_host[slot, len(held)] = page
+            held.append(page)
+            grew += 1
+        if grew:
+            self.table = jnp.asarray(self._table_host)
+        return grew
+
+    def free_slot(self, slot: int) -> None:
+        """Return all of ``slot``'s pages to the free list (at retirement)."""
+        for page in self._slot_pages[slot]:
+            self.allocator.free(page)
+        self._slot_pages[slot] = []
+        self._table_host[slot, :] = self._trash
+        self.table = jnp.asarray(self._table_host)
+
+    # -------------------- SlotCache-compatible surface --------------------
+    def write_prefill(self, slot: int, one_cache: PyTree) -> None:
+        """Install a prefilled batch-1 cache into ``slot``'s pages. The
+        caller must have backed the prompt's rows via :meth:`ensure_rows`."""
+        page_ids = jnp.asarray(self._table_host[slot], jnp.int32)
+        self.pool = self._write(self.pool, one_cache, page_ids, jnp.int32(slot))
+
+    def gather_dense(self) -> PyTree:
+        """The dense ``init_cache(batch, max_seq)`` view of the pool —
+        bitwise identical to a contiguous cache holding the same writes."""
+        return self._gather(self.pool, self.table)
+
+    def scatter_dense(self, dense: PyTree) -> None:
+        """Write a (stepped) dense cache back through the page table. Rows
+        in unallocated page chunks land on the trash page; the engine backs
+        every row a decode step writes via :meth:`ensure_rows` first, so
+        nothing real is ever trashed."""
+        self.pool = self._scatter(self.pool, self.table, dense)
+
+    def read_slot(self, slot) -> PyTree:
+        """Extract ``slot`` as a batch-1 cache pytree (tests/introspection)."""
+        dense = self.gather_dense()
+
+        def take(full, b_ax, s_ax, paged):
+            if b_ax is None:
+                return full
+            return jax.lax.dynamic_slice_in_dim(
+                full, jnp.int32(slot), 1, axis=b_ax
+            )
+
+        return self._map(take, dense)
+
+
+def _flat_axes(shapes: PyTree, axes_tree: PyTree) -> List[Optional[int]]:
+    """Flatten a per-leaf axis tree (which holds ``None`` leaves that
+    pytrees would silently drop) into a list aligned with
+    ``jax.tree.leaves(shapes)``."""
+    flat = jax.tree.leaves(axes_tree, is_leaf=lambda x: x is None)
+    if len(flat) != len(jax.tree.leaves(shapes)):
+        raise ValueError("axis tree does not align with the cache structure")
+    return flat
+
+
+def init_paged_slots(model, batch: int, max_seq: int, page_size: int, *,
+                     pool_pages: Optional[int] = None) -> PagedSlotCache:
+    """Allocate a paged slot pool (see :class:`PagedSlotCache`)."""
+    return PagedSlotCache(model, batch, max_seq, page_size,
+                          pool_pages=pool_pages)

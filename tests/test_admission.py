@@ -1,0 +1,187 @@
+"""Admission-layer unit tests (ISSUE 8 satellite): policy ordering,
+admission-time rejection, virtual-clock monotonicity, stream contracts,
+and the asyncio bridge. Model-free — these run in milliseconds.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.admission import (
+    AdmissionQueue,
+    Arrival,
+    VirtualClock,
+    iter_async,
+)
+from repro.serve.engine import Request
+
+
+def req(prompt_len=4, max_new=8, temperature=0.0):
+    return Request(
+        prompt=np.arange(1, prompt_len + 1, dtype=np.int32),
+        max_new_tokens=max_new,
+        temperature=temperature,
+    )
+
+
+# -------------------- virtual clock --------------------
+def test_clock_monotonic():
+    clk = VirtualClock()
+    assert clk.now == 0.0
+    assert clk.advance(2.5) == 2.5
+    assert clk.advance(0.0) == 2.5  # zero-length steps are fine
+    assert clk.advance_to(4.0) == 4.0
+    assert clk.advance_to(4.0) == 4.0  # idempotent at the same instant
+    with pytest.raises(ValueError, match="backwards"):
+        clk.advance(-0.1)
+    with pytest.raises(ValueError, match="rewind"):
+        clk.advance_to(3.0)
+    assert clk.now == 4.0  # failed calls must not move time
+
+
+def test_poll_time_cannot_run_backwards():
+    q = AdmissionQueue([Arrival(0.0, req())])
+    q.poll(5.0)
+    with pytest.raises(ValueError, match="backwards"):
+        q.poll(4.0)
+
+
+# -------------------- scheduling policies --------------------
+def burst_queue(policy):
+    """A fixed synthetic burst at t=0: budgets 5/2/8/1, prompt lengths
+    4/4/4/2 — arrival order 0,1,2,3."""
+    reqs = [req(4, 5), req(4, 2), req(4, 8), req(2, 1)]
+    q = AdmissionQueue(
+        [Arrival(0.0, r) for r in reqs], policy=policy, max_seq=32
+    )
+    q.poll(0.0)
+    return q, reqs
+
+
+def drain(q):
+    order = []
+    while True:
+        item = q.pop()
+        if item is None:
+            return order
+        order.append(item[0])
+
+
+def test_fifo_policy_is_arrival_order():
+    q, _ = burst_queue("fifo")
+    assert drain(q) == [0, 1, 2, 3]
+
+
+def test_latency_policy_is_shortest_job_first():
+    # predicted service = max_new_tokens, prompt length breaks ties:
+    # budgets [5, 2, 8, 1] -> admit 3 (1 tok), 1 (2), 0 (5), 2 (8)
+    q, _ = burst_queue("latency")
+    assert drain(q) == [3, 1, 0, 2]
+
+
+def test_latency_policy_prompt_tiebreak():
+    reqs = [req(6, 4), req(2, 4), req(4, 4)]
+    q = AdmissionQueue([Arrival(0.0, r) for r in reqs], policy="latency")
+    q.poll(0.0)
+    assert drain(q) == [1, 2, 0]  # same budget: shortest prompt first
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        AdmissionQueue([], policy="round-robin")
+
+
+def test_push_back_restores_head():
+    q, _ = burst_queue("fifo")
+    idx, r = q.pop()
+    q.push_back(idx, r)
+    assert drain(q) == [0, 1, 2, 3]
+
+
+# -------------------- admission-time rejection --------------------
+def test_rejection_happens_at_admission_not_mid_decode():
+    """Over-budget prompts and zero-budget requests divert to .rejected
+    the moment they arrive; valid neighbours are unaffected."""
+    bad_long = req(prompt_len=30, max_new=8)   # 38 rows > max_seq 32
+    bad_zero = req(max_new=0)
+    bad_empty = Request(prompt=np.array([], np.int32), max_new_tokens=4)
+    good = req()
+    q = AdmissionQueue(
+        [Arrival(0.0, r) for r in (bad_long, good, bad_zero, bad_empty)],
+        max_seq=32,
+    )
+    q.poll(0.0)
+    assert len(q) == 1  # only `good` is ready
+    assert [r.index for r in q.rejected] == [0, 2, 3]
+    assert "cache rows" in bad_long.rejected
+    assert "zero-budget" in bad_zero.rejected
+    assert "empty prompt" in bad_empty.rejected
+    assert good.rejected is None
+    idx, r = q.pop()
+    assert idx == 1 and r is good  # rejections still consume indices
+
+
+def test_custom_validator_layers_on():
+    q = AdmissionQueue(
+        [Arrival(0.0, req(max_new=4)), Arrival(0.0, req(max_new=9))],
+        validator=lambda r: "budget cap" if r.max_new_tokens > 8 else None,
+    )
+    q.poll(0.0)
+    assert len(q) == 1 and len(q.rejected) == 1
+    assert q.rejected[0].reason == "budget cap"
+
+
+# -------------------- stream consumption --------------------
+def test_lazy_poll_respects_arrival_times():
+    arrivals = [Arrival(float(t), req()) for t in (0, 2, 2, 5)]
+    q = AdmissionQueue(arrivals)
+    assert q.poll(0.0) == 1
+    assert q.next_arrival_time() == 2.0
+    assert q.poll(1.9) == 0
+    assert q.poll(2.0) == 2
+    assert not q.exhausted  # one arrival still in the future
+    assert q.poll(10.0) == 1
+    drain(q)
+    assert q.exhausted
+
+
+def test_unsorted_stream_raises():
+    q = AdmissionQueue([Arrival(3.0, req()), Arrival(1.0, req())])
+    with pytest.raises(ValueError, match="not time-sorted"):
+        q.poll(10.0)
+
+
+def test_bare_pairs_and_generators_accepted():
+    def gen():
+        yield (0.0, req())
+        yield (1.5, req())
+
+    q = AdmissionQueue(gen())
+    q.poll(2.0)
+    assert len(q) == 2
+
+
+def test_from_requests_reproduces_legacy_order():
+    reqs = [req(max_new=i + 1) for i in range(5)]
+    q = AdmissionQueue.from_requests(reqs, max_seq=32)
+    q.poll(0.0)
+    assert drain(q) == [0, 1, 2, 3, 4]
+    assert q.exhausted
+
+
+def test_arrival_time_stamped_on_requests():
+    r = req()
+    q = AdmissionQueue([Arrival(3.5, r)])
+    q.poll(4.0)
+    assert r.arrival_time == 3.5
+
+
+# -------------------- asyncio bridge --------------------
+def test_iter_async_bridges_async_streams():
+    async def produce():
+        for t in range(3):
+            yield Arrival(float(t), req(max_new=t + 1))
+
+    q = AdmissionQueue(iter_async(produce()))
+    q.poll(10.0)
+    order = drain(q)
+    assert order == [0, 1, 2]
+    assert q.exhausted

@@ -465,6 +465,53 @@ def test_compare_bench_search_kind_and_fidelity_gate():
         assert cb.main([pc, "--baseline", pb, "--strict"]) == 0
 
 
+def test_compare_bench_traffic_kind_and_fidelity_gate():
+    """The serve-traffic artifact: virtual-clock metrics (latency/TTFT
+    percentiles, goodput, makespan, counts, matches_sequential) are
+    deterministic and therefore fidelity-class; only wall-clock and
+    tokens_s ride as informational perf."""
+    cb = _load_compare_bench()
+    mk = lambda p99, wall: dict(  # noqa: E731
+        profile="steady-poisson-500", arrival="poisson", policy="fifo",
+        seed=0, n_requests=500, n_accepted=500, n_rejected=0,
+        generated_tokens=2526, decode_steps=263, prefills=500,
+        occupancy=7.703, latency_p50_ticks=10.702, latency_p99_ticks=p99,
+        ttft_p50_ticks=6.491, ttft_p99_ticks=13.989,
+        makespan_ticks=263.398, goodput_tokens_per_tick=9.590,
+        pages_peak_max=2, matches_sequential=True,
+        wall_s=wall, tokens_s=2526 / wall,
+    )
+    base, cur = mk(18.775, 3.2), mk(18.775, 9.9)
+    # the ttft sentinel outranks serve's "decode_steps" claim
+    assert cb.detect_kind(cur) == "traffic"
+    rows, regressions = cb.compare(base, cur, 1e-9, 0.5)
+    assert regressions == 0  # wall-clock tripled: perf-class only
+    by = {r["metric"]: r for r in rows}
+    assert by["latency_p99_ticks"]["status"] == "ok"
+    assert by["wall_s"]["status"] in ("ok", "drift")
+    # a tick-denominated percentile moving at all is a regression...
+    rows, n = cb.compare(base, mk(19.0, 3.2), 1e-9, 0.5)
+    assert n >= 1
+    assert {r["metric"]: r for r in rows}[
+        "latency_p99_ticks"]["status"] == "REGRESSION"
+    # ...as is a lost request or a divergence from the oracle
+    assert cb.compare(base, dict(cur, n_accepted=499, n_rejected=1),
+                      1e-9, 0.5)[1] >= 1
+    bad = dict(cur, matches_sequential=False)
+    with tempfile.TemporaryDirectory() as d:
+        pb, pc = os.path.join(d, "b.json"), os.path.join(d, "c.json")
+        json.dump(base, open(pb, "w")); json.dump(bad, open(pc, "w"))
+        assert cb.main([pc, "--baseline", pb, "--strict"]) == 1
+        hist = os.path.join(d, "hist.jsonl")
+        json.dump(cur, open(pc, "w"))
+        assert cb.main([pc, "--baseline", pb, "--strict",
+                        "--history", hist, "--label", "serve-traffic"]) == 0
+        (line,) = open(hist).read().splitlines()
+        rec = json.loads(line)
+        assert rec["kind"] == "traffic" and rec["label"] == "serve-traffic"
+        assert rec["regressions"] == 0
+
+
 def test_compare_bench_history_records_devices():
     cb = _load_compare_bench()
     payload = dict(n_scenarios=2, n_devices=8,

@@ -253,6 +253,77 @@ def test_request_overflow_rejected(served):
         eng.generate(empty, seed=0)
 
 
+def test_zero_budget_request_rejected_up_front(served):
+    """max_new_tokens < 1 is rejected with a ValueError before any slot is
+    occupied (regression: a zero-budget request used to enter a slot,
+    retire without producing a token, and skew occupancy/goodput stats)."""
+    cfg, model, params = served
+    eng = Engine(model, params, batch=2, max_seq=32)
+    bad = make_requests(cfg, n=1)
+    bad[0].max_new_tokens = 0
+    with pytest.raises(ValueError, match="max_new_tokens=0"):
+        eng.generate(bad, seed=0)
+    bad[0].max_new_tokens = -3
+    with pytest.raises(ValueError, match="max_new_tokens=-3"):
+        eng.generate_sequential(bad, seed=0)
+    # valid neighbours in the same wave still serve after the bad one is
+    # removed (the batch API is all-or-nothing; streaming admission in
+    # tests/test_admission.py covers the divert-and-continue path)
+    good = make_requests(cfg, n=2, max_new=2)
+    assert all(len(r.out_tokens) == 2 for r in eng.generate(good, seed=0))
+
+
+def test_paged_engine_matches_contiguous_golden(served):
+    """Acceptance criterion: the paged SlotCache serves the existing golden
+    wave with bitwise-identical tokens to both the contiguous engine and
+    the sequential oracle, while each request peaks at no more than
+    ceil(rows_used / page_size) pages."""
+    cfg, model, params = served
+    page_size = 5  # non-dividing: 32 rows -> 7 pages/slot, last partial
+    dense = Engine(model, params, batch=2, max_seq=32)
+    paged = Engine(model, params, batch=2, max_seq=32, page_size=page_size)
+    assert paged.paged and not dense.paged
+    ref = dense.generate_sequential(make_requests(cfg), seed=0)
+    base = dense.generate(make_requests(cfg), seed=0)
+    got = paged.generate(make_requests(cfg), seed=0)
+    for r, b, g in zip(ref, base, got):
+        assert g.done
+        assert g.out_tokens == r.out_tokens == b.out_tokens
+        # lazy allocation: pages track rows actually written, not max_seq
+        rows = len(g.prompt) + len(g.out_tokens)
+        assert g.pages_peak is not None
+        assert g.pages_peak <= -(-rows // page_size)
+    # scheduling metrics are unchanged by the cache layout
+    for key in ("decode_steps", "generated_tokens", "occupancy"):
+        assert paged.last_stats[key] == dense.last_stats[key]
+    # the wave returned every page: the pool is fully free afterwards
+    alloc = paged.slots.allocator
+    assert alloc.n_held == 0 and alloc.n_free == alloc.n_pages
+
+
+def test_paged_engine_sampling_matches(served):
+    """Temperature sampling through the paged cache replays the same key
+    chain: tokens equal the contiguous engine's under the same seed."""
+    cfg, model, params = served
+    mk = lambda: make_requests(cfg, n=4, temperature=0.8, max_new=6)
+    dense = Engine(model, params, batch=2, max_seq=32)
+    paged = Engine(model, params, batch=2, max_seq=32, page_size=8)
+    a = dense.generate(mk(), seed=7)
+    b = paged.generate(mk(), seed=7)
+    for x, y in zip(a, b):
+        assert x.out_tokens == y.out_tokens
+
+
+def test_paged_engine_constructor_validation(served):
+    cfg, model, params = served
+    with pytest.raises(ValueError, match="page_size"):
+        Engine(model, params, batch=2, max_seq=32, page_size=0)
+    with pytest.raises(ValueError, match="page_size"):
+        Engine(model, params, batch=2, max_seq=32, pool_pages=4)
+    with pytest.raises(ValueError, match="pool_pages"):
+        Engine(model, params, batch=2, max_seq=32, page_size=8, pool_pages=2)
+
+
 def test_slot_cache_axes_and_bytes(served):
     """batch_axes finds exactly one slot axis per KV leaf and the pool's
     byte count scales linearly in the slot count."""

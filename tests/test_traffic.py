@@ -1,0 +1,207 @@
+"""Traffic-simulator tests (ISSUE 8 satellite): profile schema validation,
+deterministic arrival generation, and the golden determinism contract —
+traffic-driven batched serving is token-identical to the per-request
+oracle across seeds and arrival profiles, including EOS retirement
+mid-wave and paged KV serving.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.transformer import CallConfig, build_model
+from repro.serve import (
+    AdmissionQueue,
+    Engine,
+    LengthMix,
+    Request,
+    TrafficProfile,
+    generate_arrivals,
+    simulate,
+)
+
+EOS = 271  # appears organically mid-sequence in greedy smollm-reduced runs
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("smollm-135m").reduced()
+    model = build_model(cfg, CallConfig(remat="none"))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def profile(**over):
+    base = dict(
+        name="t", num_requests=14, arrival="poisson", num_users=10,
+        requests_per_user_tick=0.08,
+        prompt_lens=[4, 6], output_lens={"choices": [2, 5, 8]},
+        temperature=0.0, seed=0,
+    )
+    base.update(over)
+    return TrafficProfile.from_dict(base)
+
+
+# -------------------- schema validation --------------------
+def test_profile_roundtrip_and_defaults():
+    p = profile()
+    assert TrafficProfile.from_dict(p.to_dict()) == p
+    assert p.rate == pytest.approx(0.8)
+    assert p.max_rows == 6 + 8
+
+
+@pytest.mark.parametrize(
+    "patch, err",
+    [
+        (dict(extra_knob=1), "unknown profile keys"),
+        (dict(arrival="fractal"), "unknown arrival"),
+        (dict(num_requests=0), "num_requests"),
+        (dict(num_users=0), "num_users"),
+        (dict(requests_per_user_tick=0.0), "requests_per_user_tick"),
+        (dict(burst_size=0), "burst_size"),
+        (dict(temperature=-0.5), "temperature"),
+        (dict(prompt_lens=[0]), ">= 1"),
+        (dict(prompt_lens=[4, 4]), "duplicate"),
+        (dict(output_lens={"choices": [2], "weights": [1, 2]}), "weights"),
+        (dict(output_lens={"choices": [2], "typo": 1}), "unknown keys"),
+        (dict(output_lens="many"), "length mix|choices|mapping"),
+    ],
+)
+def test_profile_validation_rejects(patch, err):
+    base = profile().to_dict()
+    base.update(patch)
+    with pytest.raises(ValueError, match=err):
+        TrafficProfile.from_dict(base)
+
+
+def test_profile_missing_fields():
+    with pytest.raises(ValueError, match="missing"):
+        TrafficProfile.from_dict({"name": "x"})
+
+
+def test_length_mix_weighted_sampling():
+    mix = LengthMix(choices=[2, 8], weights=[0, 1])  # degenerate: always 8
+    assert set(mix.sample(np.random.RandomState(0), 50)) == {8}
+
+
+# -------------------- arrival generation --------------------
+def test_arrivals_deterministic_and_sorted():
+    p = profile(num_requests=50)
+    a1 = generate_arrivals(p, vocab_size=64)
+    a2 = generate_arrivals(p, vocab_size=64)
+    t1 = [a.time for a in a1]
+    assert t1 == sorted(t1)
+    assert t1 == [a.time for a in a2]
+    for x, y in zip(a1, a2):
+        assert np.array_equal(x.request.prompt, y.request.prompt)
+        assert x.request.max_new_tokens == y.request.max_new_tokens
+    # a different seed is a different workload
+    t3 = [a.time for a in generate_arrivals(profile(num_requests=50, seed=1),
+                                            vocab_size=64)]
+    assert t1 != t3
+
+
+def test_burst_arrivals_group():
+    p = profile(num_requests=20, arrival="burst", burst_size=8)
+    times = [a.time for a in generate_arrivals(p, vocab_size=64)]
+    assert times[:8] == [0.0] * 8          # first burst lands together
+    assert len(set(times)) == 3            # 20 reqs / bursts of 8
+    # aggregate rate preserved: bursts spaced burst_size/rate apart
+    assert times[8] == pytest.approx(8 / p.rate)
+
+
+def test_profile_lengths_bound_engine_capacity():
+    p = profile()
+    for a in generate_arrivals(p, vocab_size=64):
+        assert len(a.request.prompt) + a.request.max_new_tokens <= p.max_rows
+
+
+# -------------------- golden determinism --------------------
+@pytest.mark.parametrize("arrival", ["poisson", "burst"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_traffic_serving_token_identical_to_oracle(served, arrival, seed):
+    """The golden contract at the serving tier: 3 seeds x 2 arrival
+    profiles, EOS retirement mid-wave, paged KV, FIFO admission — every
+    accepted request's tokens equal the sequential oracle's, replayed
+    with the arrival indices."""
+    cfg, model, params = served
+    p = profile(arrival=arrival, seed=seed, burst_size=6)
+    eng = Engine(model, params, batch=3, max_seq=p.max_rows,
+                 eos_id=EOS, page_size=4)
+    payload = simulate(eng, p, policy="fifo", check=True)
+    assert payload["matches_sequential"]
+    assert payload["n_accepted"] == p.num_requests
+    # EOS retirement really happened mid-wave in at least one profile:
+    # some request stopped short of its budget (checked on seed 0 where
+    # the reduced model's greedy argmax emits EOS early)
+    assert payload["decode_steps"] > 0
+
+
+def test_eos_retirement_mid_wave(served):
+    """At least one request must retire on EOS before exhausting its
+    budget, or the golden test above isn't exercising retirement."""
+    cfg, model, params = served
+    p = profile(output_lens={"choices": [12]}, num_requests=8, seed=0)
+    eng = Engine(model, params, batch=3, max_seq=p.max_rows, eos_id=EOS)
+    arrivals = generate_arrivals(p, cfg.vocab_size)
+    queue = AdmissionQueue(arrivals, max_seq=eng.max_seq)
+    done = eng.serve(queue, seed=0, do_sample=False)
+    assert any(
+        len(r.out_tokens) < r.max_new_tokens and r.out_tokens[-1] == EOS
+        for r in done
+    ), "no request hit EOS mid-budget; pick a different EOS id"
+    # and truncated outputs still match the oracle
+    clones = [Request(prompt=a.request.prompt.copy(),
+                      max_new_tokens=a.request.max_new_tokens)
+              for a in arrivals]
+    ref = eng.generate_sequential(clones, seed=0)
+    for a, c in zip(arrivals, ref):
+        assert a.request.out_tokens == c.out_tokens
+
+
+def test_latency_policy_reorders_but_tokens_match(served):
+    """The latency-aware policy admits short jobs first on a burst —
+    a different admission order than FIFO — yet per-request tokens stay
+    oracle-identical because the key chain follows arrival indices."""
+    cfg, model, params = served
+    p = profile(arrival="burst", burst_size=14, output_lens={"choices": [2, 8]})
+    eng = Engine(model, params, batch=2, max_seq=p.max_rows, eos_id=EOS)
+    fifo = simulate(eng, p, policy="fifo", check=True)
+    lat = simulate(eng, p, policy="latency", check=True)
+    assert fifo["matches_sequential"] and lat["matches_sequential"]
+    assert fifo["generated_tokens"] == lat["generated_tokens"]
+
+
+# -------------------- metric sanity --------------------
+def test_metric_payload_sanity(served):
+    cfg, model, params = served
+    p = profile(num_requests=16)
+    eng = Engine(model, params, batch=3, max_seq=p.max_rows, page_size=4)
+    m = simulate(eng, p, check=False)
+    assert m["n_accepted"] + m["n_rejected"] == m["n_requests"]
+    assert 0 <= m["ttft_p50_ticks"] <= m["ttft_p99_ticks"]
+    assert 0 <= m["latency_p50_ticks"] <= m["latency_p99_ticks"]
+    assert m["ttft_p99_ticks"] <= m["latency_p99_ticks"]
+    assert m["goodput_tokens_per_tick"] > 0
+    assert m["makespan_ticks"] >= m["decode_steps"]  # clock may fast-forward
+    assert m["pages_peak_max"] <= -(-p.max_rows // 4)
+    # deterministic fields reproduce exactly on a re-run
+    m2 = simulate(eng, p, check=False)
+    for k in (
+        "generated_tokens", "decode_steps", "occupancy",
+        "latency_p50_ticks", "latency_p99_ticks", "ttft_p50_ticks",
+        "ttft_p99_ticks", "makespan_ticks", "goodput_tokens_per_tick",
+    ):
+        assert m[k] == m2[k], k
+
+
+def test_over_capacity_requests_rejected_not_raised(served):
+    """Streaming admission diverts over-budget requests; the wave still
+    completes and the payload counts the rejections."""
+    cfg, model, params = served
+    p = profile(output_lens={"choices": [2, 30]}, num_requests=10)
+    eng = Engine(model, params, batch=2, max_seq=12)  # 30-token budgets: no
+    m = simulate(eng, p, check=True)
+    assert m["n_rejected"] > 0
+    assert m["n_accepted"] + m["n_rejected"] == 10
+    assert m["matches_sequential"]

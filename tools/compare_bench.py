@@ -1,7 +1,8 @@
 """Benchmark-artifact regression differ (the CI compare step).
 
 Diffs a freshly produced sweep (`benchmarks/sweep.py`), serve
-(`benchmarks/serve_bench.py`), executor (`benchmarks/executor_bench.py`),
+(`benchmarks/serve_bench.py`), traffic (`serve_bench.py --traffic`),
+executor (`benchmarks/executor_bench.py`),
 or mapping-search (`benchmarks/search_bench.py`)
 JSON artifact against a committed baseline in ``benchmarks/baselines/`` and
 emits a GitHub-flavored markdown table — pipe it into
@@ -117,15 +118,43 @@ SEARCH_METRICS: List[Tuple[str, str]] = [
     ("wall_s", "perf"),
 ]
 
+# traffic artifact (benchmarks/serve_bench.py --traffic): the virtual-clock
+# serving-tier metrics. Everything denominated in ticks is deterministic —
+# arrivals are RandomState-seeded and 1 tick == one pooled decode step, so
+# latency/TTFT percentiles and goodput reproduce exactly across runners and
+# gate under --strict, alongside the oracle token-parity boolean. Only the
+# hardware throughputs are perf-class.
+TRAFFIC_METRICS: List[Tuple[str, str]] = [
+    ("n_requests", "fidelity"),
+    ("n_accepted", "fidelity"),
+    ("n_rejected", "fidelity"),
+    ("generated_tokens", "fidelity"),
+    ("decode_steps", "fidelity"),
+    ("occupancy", "fidelity"),
+    ("matches_sequential", "fidelity"),
+    ("latency_p50_ticks", "fidelity"),
+    ("latency_p99_ticks", "fidelity"),
+    ("ttft_p50_ticks", "fidelity"),
+    ("ttft_p99_ticks", "fidelity"),
+    ("makespan_ticks", "fidelity"),
+    ("goodput_tokens_per_tick", "fidelity"),
+    ("pages_peak_max", "fidelity"),
+    ("tokens_s", "perf"),
+    ("wall_s", "perf"),
+]
+
 METRICS_BY_KIND: Dict[str, List[Tuple[str, str]]] = {
     "sweep": SWEEP_METRICS,
     "serve": SERVE_METRICS,
     "executor": EXECUTOR_METRICS,
     "search": SEARCH_METRICS,
+    "traffic": TRAFFIC_METRICS,
 }
 
 
 def detect_kind(payload: Dict) -> str:
+    if "ttft_p99_ticks" in payload:
+        return "traffic"
     if "searched_le_greedy" in payload:
         return "search"
     if "batches" in payload and "events_match" in payload:
@@ -136,7 +165,7 @@ def detect_kind(payload: Dict) -> str:
         return "serve"
     raise SystemExit(
         "compare_bench: unrecognized artifact (not sweep/serve/executor/"
-        "search)")
+        "search/traffic)")
 
 
 def extract(payload: Dict, path: str) -> Optional[float]:
