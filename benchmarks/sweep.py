@@ -133,6 +133,10 @@ def main(argv=None) -> int:
                     help="ArchSpec axis: CIM array cols (default: 256)")
     ap.add_argument("--node-nm", nargs="*", type=float, default=None,
                     help="ArchSpec axis: technology node nm (default: 45)")
+    ap.add_argument("--dataflow", nargs="*", default=None,
+                    help="dataflow axis: registered model names (default: "
+                         "com; e.g. --dataflow com minimal_buffer sweeps "
+                         "the head-to-head)")
     ap.add_argument("--backend", choices=("numpy", "jax", "both"),
                     default="numpy", help="evaluation backend(s) to run")
     ap.add_argument("--sharded", action="store_true",
@@ -178,6 +182,7 @@ def main(argv=None) -> int:
             n_c=tuple(args.n_c) if args.n_c else base.n_c,
             n_m=tuple(args.n_m) if args.n_m else base.n_m,
             node_nm=tuple(args.node_nm) if args.node_nm else base.node_nm,
+            dataflow=tuple(args.dataflow) if args.dataflow else base.dataflow,
         )
     except SweepValidationError as e:
         ap.error(str(e))
@@ -204,6 +209,12 @@ def main(argv=None) -> int:
 
     oracle = results.get("numpy") or results[backends[0]]
     payload = oracle.as_dict()
+    # which event models produced these columns, and under which registry
+    # generation (baseline drift then names the model change, not a float)
+    from repro.dataflows import REGISTRY_VERSION
+
+    payload["dataflow_models"] = list(grid.dataflow)
+    payload["dataflow_registry_version"] = REGISTRY_VERSION
     payload["backends"] = {
         b: dict(engine_wall_s=timings[b],
                 scenarios_per_s=grid.n_scenarios / max(timings[b], 1e-12))

@@ -6,15 +6,30 @@ derived from each counterpart column's published CE and Domino's power split
 because 'Domino uses others' CIM arrays'). Everything else — exec time,
 throughput, on-/off-chip power, area, CE — comes from our simulator
 (core/simulator.py) and is compared against the paper's published values.
+
+``--dataflow`` re-scores the table under any registered dataflow model
+(``repro.dataflows``) on the same silicon: the default ``com`` routes
+through ``evaluate_scenario``'s native path and is bitwise the historical
+``DominoModel.evaluate`` numbers; a rival (e.g. ``minimal_buffer``)
+substitutes its own energy/structure closed forms, which is what the
+'improvement vs counterpart' columns look like if Domino had shipped a
+conventional buffer-centric dataflow instead.
+
+    PYTHONPATH=src python benchmarks/table_iv.py
+    PYTHONPATH=src python benchmarks/table_iv.py \
+        --dataflow minimal_buffer --out table-iv-rival.json
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 from typing import Dict, List
 
 from repro.core import energy as E
-from repro.core.mapping import NETWORKS
-from repro.core.program import compile_program
-from repro.core.simulator import DominoModel
+from repro.dataflows import REGISTRY_VERSION, available_dataflows
+from repro.sweep import evaluate_scenario
+from repro.sweep.scenario import Scenario
 
 
 def implied_e_mac_pj(key: str) -> float:
@@ -24,19 +39,23 @@ def implied_e_mac_pj(key: str) -> float:
     return (1.0 / p["ce"]) * (cim_w / p["power_w"])  # pJ/op
 
 
-def run() -> List[Dict]:
+def run(dataflow: str = "com") -> List[Dict]:
     rows = []
     for key, cp in E.COUNTERPARTS.items():
-        # one compiled program per Tab. IV workload (cached across rows)
-        model = DominoModel(compile_program(NETWORKS[cp.model]()))
         e_mac = implied_e_mac_pj(key)
         paper = E.PAPER_DOMINO[key]
+        # the scalar reference path (one cached compile per workload);
+        # dataflow="com" is bitwise the historical DominoModel.evaluate
+        ours = dict(evaluate_scenario(Scenario(
+            network=cp.model, n_chips=paper["chips"], precision_bits=8,
+            e_mac_pj=e_mac, dataflow=dataflow)))
         # pin the evaluation setup (chips, active area) to the paper's —
         # they encode the substituted CIM arrays' area + sync duplication
         paper_area = {"jia_isscc21": 343.2, "yue_isscc20": 655.2,
                       "yoon_isscc21": 381.6, "atomlayer": 192.0,
                       "cascade": 125.5}[key]
-        ours = model.evaluate(e_mac, n_chips=paper["chips"], area_mm2=paper_area)
+        ours["area_mm2"] = paper_area
+        ours["thr_tops_mm2"] = ours["ops"] * ours["img_s"] / 1e12 / paper_area
 
         # primary: the paper's own published normalized counterpart values
         # (their [13] polynomial normalization isn't reproducible from the
@@ -51,6 +70,7 @@ def run() -> List[Dict]:
         rows.append(dict(
             counterpart=key,
             model=cp.model,
+            dataflow=dataflow,
             # --- ours (simulated) ---
             ours_ce=ours["ce_tops_w"],
             ours_thr=ours["thr_tops_mm2"],
@@ -82,8 +102,18 @@ def run() -> List[Dict]:
     return rows
 
 
-def main():
-    rows = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dataflow", default="com",
+                    choices=list(available_dataflows()),
+                    help="registered dataflow model to score the table "
+                         "under (default: com, the paper's)")
+    ap.add_argument("--out", default=None,
+                    help="also write a JSON payload here (rows + dataflow "
+                         "model + registry version)")
+    args = ap.parse_args(argv)
+
+    rows = run(args.dataflow)
     hdr = (f"{'counterpart':14s} {'net':16s} | {'CE ours':>8s} {'CE paper':>8s} | "
            f"{'thr ours':>8s} {'thr papr':>8s} | {'on-chipW':>8s} {'papr':>5s} | "
            f"{'CEx ours':>8s} {'CEx papr':>8s} | {'THRx ours':>9s} {'THRx papr':>9s}")
@@ -98,8 +128,16 @@ def main():
     ce_imps = [r["ce_improvement"] for r in rows]
     thr_imps = [r["thr_improvement"] for r in rows]
     print(f"\nours:  CE improvement {min(ce_imps):.2f}-{max(ce_imps):.2f}x | "
-          f"throughput {min(thr_imps):.2f}-{max(thr_imps):.2f}x")
+          f"throughput {min(thr_imps):.2f}-{max(thr_imps):.2f}x"
+          f" [dataflow={args.dataflow}]")
     print("paper: CE improvement 1.77-2.37x | throughput 1.28-13.16x")
+    if args.out:
+        payload = dict(dataflow=args.dataflow,
+                       dataflow_registry_version=REGISTRY_VERSION,
+                       rows=rows)
+        with open(args.out, "w") as f:
+            f.write(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
     return rows
 
 

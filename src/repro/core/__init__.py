@@ -51,7 +51,13 @@ def cache_stats() -> Dict[str, "object"]:
     engine = sys.modules.get("repro.sweep.engine")
     if engine is not None:
         stats["network_summary"] = engine._network_summary.cache_info()
+        stats["dataflow_summary"] = engine._dataflow_summary.cache_info()
     search = sys.modules.get("repro.search")
     if search is not None:
         stats["search_mapping"] = search._search_mapping.cache_info()
+    dataflows = sys.modules.get("repro.dataflows")
+    if dataflows is not None:
+        # one traffic_totals + one summary_overrides cache per registered
+        # model, keyed "dataflow:<name>:<cache>"
+        stats.update(dataflows.dataflow_cache_stats())
     return stats

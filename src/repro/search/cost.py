@@ -227,15 +227,32 @@ class PopulationEvaluator:
     counts ride the chips axis), dispatched to a registered sweep backend
     — ``"jax"`` (default) runs the jitted ``_columns_kernel_flat``,
     ``"numpy"`` the oracle. ``evaluations`` counts every candidate scored.
+
+    ``dataflow`` (default ``"com"``) switches the ``columns`` objective to
+    a registered rival model (``repro.dataflows``): the rival's
+    mapping-independent energy/structure summaries replace each
+    candidate's, yielding the rival's reference columns on the same
+    geometry — "does the searched COM mapping still beat the rival?" is
+    then a direct column comparison. The scalar ``costs`` path (the search
+    objective proper) always scores the COM closed forms.
     """
 
     def __init__(self, layers: Sequence, arch: ArchSpec = DEFAULT_ARCH, *,
-                 backend: str = "jax", e_mac_pj: float = 0.1):
+                 backend: str = "jax", e_mac_pj: float = 0.1,
+                 dataflow: str = "com"):
         self.layers = tuple(layers)
         self.arch = arch
         self.backend_name = backend
         self.e_mac_pj = float(e_mac_pj)
         self.evaluations = 0
+        self.dataflow = dataflow
+        if dataflow != "com":
+            from repro.dataflows import available_dataflows
+
+            if dataflow not in available_dataflows():
+                raise ValueError(
+                    f"unknown dataflow {dataflow!r}; registered: "
+                    f"{list(available_dataflows())}")
         from repro.sweep.engine import _resolve_backend
 
         self._backend = _resolve_backend(backend)
@@ -256,7 +273,17 @@ class PopulationEvaluator:
             costs = [mapping_cost(self.layers, arch, c) for c in cands]
         P = len(cands)
         t = layer_table(self.layers)
-        summary = {f: np.empty((P, 1, 1, 1, 1)) for f in SUMMARY_FIELDS}
+        summary = {f: np.empty((P, 1, 1, 1, 1, 1)) for f in SUMMARY_FIELDS}
+        rival_ov = {}
+        if self.dataflow != "com":
+            # rival models are mapping-independent: one summary override
+            # set replaces every candidate's energy/structure fields, so
+            # the returned columns are the rival's reference values the
+            # searched COM mappings are compared against
+            from repro.dataflows import get_dataflow
+
+            rival_ov = get_dataflow(self.dataflow).summary_overrides(
+                self.layers, arch)
         chips = np.empty(P)
         skip = any(isinstance(l, ConvSpec) and l.residual_from
                    for l in self.layers)
@@ -281,11 +308,12 @@ class PopulationEvaluator:
                 offchip_pj_per_bit=arch.energy.interchip_pj_per_bit
                 * arch.energy_scale(),
             )
+            vals.update(rival_ov)
             for f in SUMMARY_FIELDS:
-                summary[f][i, 0, 0, 0, 0] = vals[f]
+                summary[f][i, 0, 0, 0, 0, 0] = vals[f]
             chips[i] = cost.n_chips
         batch = ScenarioBatch(
-            shape=(P, P, 1, 1, 1, 1, 1, 1),
+            shape=(P, P, 1, 1, 1, 1, 1, 1, 1),
             chips=chips,
             bits=np.array([float(arch.precision_bits)]),
             e_mac=np.array([self.e_mac_pj]),

@@ -87,7 +87,8 @@ def _columns_kernel(
 
     sm = {
         f: summary[f].reshape(
-            shape[0], 1, 1, 1, shape[4], shape[5], shape[6], shape[7]
+            shape[0], 1, 1, 1, shape[4], shape[5], shape[6], shape[7],
+            shape[8]
         )
         for f in summary
     }

@@ -7,6 +7,12 @@ batch builder consumes the cached ``CompiledProgram`` instead of re-deriving
 mappings; the scenario-dependent Tab. IV columns are then pure array
 expressions over the stacked scenario axes.
 
+The grid's ``dataflow`` axis selects the event model per scenario: ``"com"``
+reads the engine's native summaries (bitwise the pre-registry numbers),
+rival names from :func:`repro.dataflows.available_dataflows` substitute
+their own energy/structure summaries (:func:`dataflow_summary`) through the
+same column math on both backends.
+
 Backends (``run_sweep(grid, backend=...)``):
 
 * ``"numpy"`` — the golden oracle. Mirrors ``DominoModel.evaluate``
@@ -110,15 +116,49 @@ network_summary.cache_info = _network_summary.cache_info
 network_summary.cache_clear = _network_summary.cache_clear
 
 
+@lru_cache(maxsize=2048)
+def _dataflow_summary(dataflow: str, name: str, arch: ArchSpec
+                      ) -> NetworkSummary:
+    base = _network_summary(name, arch)
+    if dataflow == "com":
+        # the engine's native summary IS the COM model (the registered
+        # adapter is bitwise-anchored to it); never re-derive
+        return base
+    from repro.dataflows import get_dataflow
+
+    model = get_dataflow(dataflow)
+    ov = model.summary_overrides(resolve_network(name).layers, arch)
+    return dataclasses.replace(
+        base,
+        n_tiles=int(ov["n_tiles"]) if "n_tiles" in ov else base.n_tiles,
+        onchip_j=float(ov.get("onchip_j", base.onchip_j)),
+        offchip_values=float(ov.get("offchip_values", base.offchip_values)),
+        area_mm2=float(ov.get("area_mm2", base.area_mm2)),
+    )
+
+
+def dataflow_summary(dataflow: str, name: str,
+                     arch: ArchSpec = DEFAULT_ARCH) -> NetworkSummary:
+    """:func:`network_summary` under a registered dataflow model: the COM
+    summary with the model's ``summary_overrides`` (energy + structure)
+    substituted — timing fields stay the shared pipeline model. For
+    ``"com"`` this *is* the cached native summary, untouched."""
+    return _dataflow_summary(dataflow, name, arch)
+
+
+dataflow_summary.cache_info = _dataflow_summary.cache_info
+dataflow_summary.cache_clear = _dataflow_summary.cache_clear
+
+
 @dataclass
 class ScenarioBatch:
     """Backend input: the grid lowered to stacked arrays.
 
-    ``shape`` is the 8-axis grid shape in ``scenario.AXES`` order. The
+    ``shape`` is the 9-axis grid shape in ``scenario.AXES`` order. The
     cheap axes arrive as small per-axis value arrays (``chips``, ``bits``,
     ``e_mac``, ``tpc``); the expensive, architecture-dependent quantities
     arrive as ``summary[field]`` arrays over the (network, tiles_per_chip,
-    n_c, n_m, node_nm) combo axes. Backends broadcast both to the full
+    n_c, n_m, node_nm, dataflow) combo axes. Backends broadcast both to the full
     grid, evaluate the column closed forms elementwise, and return
     row-major ``(n_scenarios,)`` columns — scenario ordering is fixed by
     ``SweepGrid.scenarios()`` and shared by every backend.
@@ -137,7 +177,7 @@ class ScenarioBatch:
     bits: np.ndarray           # (len(precisions),) float64
     e_mac: np.ndarray          # (len(e_mac_pj),) float64
     tpc: np.ndarray            # (len(tiles_per_chip),) float64
-    summary: Dict[str, np.ndarray]  # each (l_net, l_tpc, l_nc, l_nm, l_node)
+    summary: Dict[str, np.ndarray]  # each (l_net, l_tpc, l_nc, l_nm, l_node, l_df)
     fdm_factor: float
     step_hz: float
     pipeline_eff: float
@@ -180,10 +220,10 @@ class ScenarioBatch:
         (or gathered per selected scenario in chunked mode)."""
         if self.sel is not None:
             i = self._sel_indices()
-            return self.summary[field][i[0], i[4], i[5], i[6], i[7]]
+            return self.summary[field][i[0], i[4], i[5], i[6], i[7], i[8]]
         l = self.shape
         return self.summary[field].reshape(
-            l[0], 1, 1, 1, l[4], l[5], l[6], l[7]
+            l[0], 1, 1, 1, l[4], l[5], l[6], l[7], l[8]
         )
 
 
@@ -198,8 +238,8 @@ def build_batch(grid: SweepGrid, arch: ArchSpec = DEFAULT_ARCH) -> ScenarioBatch
     """
     shape = grid.shape
     summary = {
-        f: np.empty((shape[0], shape[4], shape[5], shape[6], shape[7]),
-                    dtype=np.float64)
+        f: np.empty((shape[0], shape[4], shape[5], shape[6], shape[7],
+                     shape[8]), dtype=np.float64)
         for f in SUMMARY_FIELDS
     }
     for i0, net in enumerate(grid.networks):
@@ -211,9 +251,15 @@ def build_batch(grid: SweepGrid, arch: ArchSpec = DEFAULT_ARCH) -> ScenarioBatch
                             tiles_per_chip=int(tpc), n_c=int(nc),
                             n_m=int(nm), node_nm=float(node),
                         )
-                        s = network_summary(net, arch_c)
-                        for f in SUMMARY_FIELDS:
-                            summary[f][i0, i4, i5, i6, i7] = getattr(s, f)
+                        for i8, df in enumerate(grid.dataflow):
+                            # "com" stays on the native summary path;
+                            # rivals substitute their summary_overrides
+                            s = (network_summary(net, arch_c)
+                                 if df == "com"
+                                 else dataflow_summary(df, net, arch_c))
+                            for f in SUMMARY_FIELDS:
+                                summary[f][i0, i4, i5, i6, i7, i8] = \
+                                    getattr(s, f)
     return ScenarioBatch(
         shape=shape,
         chips=np.asarray(grid.chip_counts, dtype=np.float64),
@@ -417,12 +463,12 @@ def run_sweep(grid: SweepGrid, backend: Union[str, SweepBackend] = "numpy",
         n = grid.n_scenarios
         cols = {c: np.empty(n, dtype=np.float64) for c in COLUMNS}
         peak = 0
-        # accounted per-chunk array bytes: the 8 unraveled index vectors,
+        # accounted per-chunk array bytes: the 9 unraveled index vectors,
         # the 4+|S| gathered per-scenario views, and the |C| column chunks
         # — all (chunk,) float64/int64. Backend elementwise temporaries
         # (a small constant factor more) scale with the same chunk length;
         # nothing scales with the full grid.
-        per_row = 8 * (8 + 4 + len(SUMMARY_FIELDS) + len(COLUMNS))
+        per_row = 8 * (9 + 4 + len(SUMMARY_FIELDS) + len(COLUMNS))
         for lo in range(0, n, chunk_size):
             sel = np.arange(lo, min(lo + chunk_size, n), dtype=np.int64)
             out = fn(dataclasses.replace(batch, sel=sel))
@@ -438,10 +484,58 @@ def run_sweep(grid: SweepGrid, backend: Union[str, SweepBackend] = "numpy",
     )
 
 
+def _evaluate_rival(s: Scenario, arch: ArchSpec) -> Dict[str, float]:
+    """Scalar columns under a rival dataflow model — a fully independent
+    code path from the batched summary tables: energy/structure come
+    straight from the registered model, the shared columns mirror
+    ``DominoModel.evaluate`` expression-for-expression (the same role the
+    scalar oracle plays for the com column)."""
+    from repro.dataflows import get_dataflow
+
+    arch_s = s.arch(arch)
+    wl = resolve_network(s.network)
+    model = DominoModel(compile_program(wl, arch_s))
+    df = get_dataflow(s.dataflow)
+    layers = tuple(wl.layers)
+    ov = df.summary_overrides(layers, arch_s)
+    n_tiles = int(ov["n_tiles"]) if "n_tiles" in ov else model.n_tiles
+    onchip_j = float(ov.get("onchip_j", model.onchip_energy_img_j()))
+    offv = float(ov.get("offchip_values", offchip_values_img(model.allocs)))
+    area = float(ov.get(
+        "area_mm2", model.n_tiles * arch_s.tile_area_um2() / 1e6))
+    chips = s.n_chips
+    per_copy = arch_s.fdm_factor * arch_s.step_hz / model.bottleneck_px()
+    copies = max(1.0, (chips * arch_s.tiles_per_chip) / n_tiles)
+    img_s = per_copy * copies * arch_s.pipeline_eff * model.skip_stall()
+    e_off = offv * s.precision_bits * (
+        arch_s.energy.interchip_pj_per_bit * arch_s.energy_scale()) * 1e-12
+    ops = model.total_ops()
+    e_cim = ops * s.e_mac_pj * 1e-12
+    e_total = onchip_j + e_off + e_cim
+    return dict(
+        exec_us=model.exec_time_us(),
+        img_s=img_s,
+        power_w=e_total * img_s,
+        onchip_w=onchip_j * img_s,
+        offchip_w=e_off * img_s,
+        cim_w=e_cim * img_s,
+        ce_tops_w=ops / e_total / 1e12,
+        ops=ops,
+        area_mm2=area,
+        thr_tops_mm2=ops * img_s / 1e12 / area,
+        img_s_per_core=img_s / (chips * arch_s.tiles_per_chip),
+        n_chips=chips,
+        n_tiles=n_tiles,
+    )
+
+
 def evaluate_scenario(s: Scenario, arch: ArchSpec = DEFAULT_ARCH) -> Dict[str, float]:
-    """Scalar single-scenario evaluation through the reference path
-    (``DominoModel.evaluate``) — the oracle the batched engine is golden-
-    tested against."""
+    """Scalar single-scenario evaluation through the reference path —
+    ``DominoModel.evaluate`` for the native ``dataflow="com"``, the rival
+    model's overrides through the identical column expressions otherwise
+    — the oracle the batched engine is golden-tested against."""
     validate_scenario(s)
+    if s.dataflow != "com":
+        return _evaluate_rival(s, arch)
     model = DominoModel(compile_program(resolve_network(s.network), s.arch(arch)))
     return model.evaluate(s.e_mac_pj, n_chips=s.n_chips)

@@ -37,17 +37,20 @@ class Precision(IntEnum):
 
 
 # Grid axes, in cross-product (row-major) order: the original four, then the
-# ArchSpec axes appended so pre-`ArchSpec` grids keep their scenario order.
+# ArchSpec axes, then the dataflow axis — each generation appended last so
+# older grids keep their scenario order (and, at the default single-value
+# tail axes, their exact flat indices).
 AXES: Tuple[str, ...] = (
     "networks", "chip_counts", "precisions", "e_mac_pj",
-    "tiles_per_chip", "n_c", "n_m", "node_nm",
+    "tiles_per_chip", "n_c", "n_m", "node_nm", "dataflow",
 )
 
 
 @dataclass(frozen=True)
 class Scenario:
     """One evaluation point: network x chip count x precision x CIM energy
-    x architecture (tiles/chip, array geometry, technology node)."""
+    x architecture (tiles/chip, array geometry, technology node) x
+    dataflow model."""
 
     network: str
     n_chips: int
@@ -57,6 +60,7 @@ class Scenario:
     n_c: int = DEFAULT_ARCH.n_c
     n_m: int = DEFAULT_ARCH.n_m
     node_nm: float = DEFAULT_ARCH.node_nm
+    dataflow: str = "com"
 
     def arch(self, base: ArchSpec = DEFAULT_ARCH) -> ArchSpec:
         """The ``ArchSpec`` this scenario evaluates: ``base`` with the
@@ -67,7 +71,7 @@ class Scenario:
         )
 
     def as_dict(self) -> Dict:
-        """All eight scenario parameters as a plain dict (the per-row
+        """All nine scenario parameters as a plain dict (the per-row
         params half of ``SweepResult.rows()``)."""
         return asdict(self)
 
@@ -120,6 +124,20 @@ def _check_node(n, problems: List[str]) -> None:
         )
 
 
+def _check_dataflow(v, problems: List[str]) -> None:
+    # lazy import: the dataflow registry pulls in the model modules, and
+    # plain COM-only grids shouldn't pay (or depend on) that
+    from repro.dataflows import available_dataflows
+
+    known = available_dataflows()
+    if not isinstance(v, str):
+        problems.append(
+            f"dataflow {v!r} must be a string (one of {list(known)})")
+    elif v not in known:
+        problems.append(
+            f"unknown dataflow {v!r}; registered models: {list(known)}")
+
+
 _AXIS_CHECKS = {
     "networks": _check_network,
     "chip_counts": _check_chips,
@@ -129,6 +147,7 @@ _AXIS_CHECKS = {
     "n_c": lambda v, p: _check_pos_int(v, "n_c (CIM rows)", p),
     "n_m": lambda v, p: _check_pos_int(v, "n_m (CIM cols)", p),
     "node_nm": _check_node,
+    "dataflow": _check_dataflow,
 }
 
 
@@ -155,6 +174,7 @@ def validate_scenario(s: Scenario) -> Scenario:
     _check_pos_int(s.n_c, "n_c (CIM rows)", problems)
     _check_pos_int(s.n_m, "n_m (CIM cols)", problems)
     _check_node(s.node_nm, problems)
+    _check_dataflow(s.dataflow, problems)
     if problems:
         raise SweepValidationError("\n".join(problems))
     return s
@@ -176,6 +196,11 @@ class SweepGrid:
                          paper: 256 x 256).
     ``node_nm``        — technology node in nm (ArchSpec axis; energies are
                          Stillmaker-Baas-rescaled from the 45nm table).
+    ``dataflow``       — registered dataflow model names
+                         (:func:`repro.dataflows.available_dataflows`);
+                         ``"com"`` is the paper's native dataflow, rivals
+                         (e.g. ``"minimal_buffer"``) substitute their own
+                         energy/structure summaries on the same silicon.
     """
 
     networks: Tuple[str, ...]
@@ -186,6 +211,7 @@ class SweepGrid:
     n_c: Tuple[int, ...] = (DEFAULT_ARCH.n_c,)
     n_m: Tuple[int, ...] = (DEFAULT_ARCH.n_m,)
     node_nm: Tuple[float, ...] = (DEFAULT_ARCH.node_nm,)
+    dataflow: Tuple[str, ...] = ("com",)
 
     def __post_init__(self):
         # normalize: accept any sequence, store tuples (frozen dataclass)
@@ -226,8 +252,8 @@ class SweepGrid:
         return [
             Scenario(network=n, n_chips=c, precision_bits=int(p),
                      e_mac_pj=float(e), tiles_per_chip=int(t), n_c=int(nc),
-                     n_m=int(nm), node_nm=float(node))
-            for n, c, p, e, t, nc, nm, node in product(
+                     n_m=int(nm), node_nm=float(node), dataflow=df)
+            for n, c, p, e, t, nc, nm, node, df in product(
                 *(getattr(self, name) for name in AXES)
             )
         ]
@@ -244,6 +270,7 @@ class SweepGrid:
             n_c=list(self.n_c),
             n_m=list(self.n_m),
             node_nm=[float(n) for n in self.node_nm],
+            dataflow=list(self.dataflow),
         )
 
     @classmethod

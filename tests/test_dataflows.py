@@ -1,0 +1,283 @@
+"""repro.dataflows: registry semantics, the bitwise COM anchor, hand-
+computed minimal-buffer goldens, sweep/scalar-oracle integration of the
+``dataflow`` axis, and the cache_stats surface."""
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # stripped container: deterministic fallback
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import cache_stats
+from repro.core.arch import DEFAULT_ARCH
+from repro.core.mapping import ConvSpec, FCSpec
+from repro.core.program import compile_program
+from repro.core.simulator import (
+    EVENT_FIELDS,
+    DominoModel,
+    offchip_values_img,
+)
+from repro.dataflows import (
+    OVERRIDABLE_SUMMARY_FIELDS,
+    REGISTRY_VERSION,
+    DataflowModel,
+    MinimalBufferDataflow,
+    available_dataflows,
+    dataflow_cache_stats,
+    get_dataflow,
+    register_dataflow,
+)
+from repro.dataflows import base as dataflows_base
+from repro.dataflows.minimal_buffer import (
+    global_buffer_pj_per_value,
+    mean_bus_hops,
+)
+from repro.sweep import SweepGrid, evaluate_scenario, run_sweep
+from repro.sweep.engine import dataflow_summary, network_summary
+from repro.sweep.registry import resolve_network
+from repro.sweep.scenario import Scenario
+
+ARCH = DEFAULT_ARCH
+
+# small hand-checkable layers: k=3/pad=1/stride=1 keeps h_out == h_in
+CONV = ConvSpec(name="c1", k=3, c_in=4, c_out=5, h_in=8, w_in=8)
+FC = FCSpec(name="f1", c_in=300, c_out=10)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_com_first_then_rivals():
+    names = available_dataflows()
+    assert names[0] == "com"
+    assert "minimal_buffer" in names
+    assert REGISTRY_VERSION >= 1
+
+
+def test_get_dataflow_unknown_names_registered():
+    with pytest.raises(KeyError) as ei:
+        get_dataflow("nope")
+    assert "com" in str(ei.value) and "minimal_buffer" in str(ei.value)
+
+
+def test_register_rejects_duplicates_and_non_models():
+    with pytest.raises(ValueError, match="already registered"):
+        register_dataflow(MinimalBufferDataflow())
+    with pytest.raises(TypeError):
+        register_dataflow(object())
+
+
+def test_overrides_restricted_to_declared_fields():
+    class Bad(MinimalBufferDataflow):
+        name = "bad-overrides"
+
+        def _overrides_uncached(self, layers, arch):
+            return (("exec_us", 1.0),)  # timing is not overridable
+
+    with pytest.raises(ValueError, match="may only set"):
+        Bad().summary_overrides((CONV,), ARCH)
+    assert "exec_us" not in OVERRIDABLE_SUMMARY_FIELDS
+
+
+# ---------------------------------------------------------------------------
+# the bitwise COM anchor: the registered adapter IS DominoModel's numbers
+# ---------------------------------------------------------------------------
+
+
+def test_com_adapter_bitwise_matches_domino_model():
+    com = get_dataflow("com")
+    for net in ("vgg11-cifar", "resnet18-cifar"):
+        layers = tuple(resolve_network(net).layers)
+        model = DominoModel(compile_program(resolve_network(net), ARCH))
+        # == on purpose: the adapter must not re-derive anything
+        assert com.onchip_energy_img_j(layers, ARCH) \
+            == model.onchip_energy_img_j()
+        assert com.offchip_energy_img_j(layers, ARCH) \
+            == model.offchip_energy_img_j()
+        assert com.offchip_values_img(layers, ARCH) \
+            == offchip_values_img(model.allocs)
+        assert com.n_arrays(layers, ARCH) == model.n_tiles
+        totals = com.traffic_totals(layers, ARCH)
+        assert set(totals) == set(EVENT_FIELDS)
+        for f in EVENT_FIELDS:
+            assert totals[f] == float(model.program.event_totals[f])
+        # empty overrides: the sweep's com column stays the native path
+        assert com.summary_overrides(layers, ARCH) == {}
+
+
+def test_dataflow_summary_com_is_the_native_summary_object():
+    s = dataflow_summary("com", "vgg11-cifar", ARCH)
+    assert s is network_summary("vgg11-cifar", ARCH)
+
+
+# ---------------------------------------------------------------------------
+# minimal_buffer hand-computed goldens
+# ---------------------------------------------------------------------------
+
+
+def test_minimal_buffer_conv_golden_counts():
+    # k=3, c_in=4 -> 36 im2col rows -> cb=1 at n_c=256; c_out=5 -> mb=1
+    t = get_dataflow("minimal_buffer").traffic_totals((CONV,), ARCH)
+    assert t == dict(
+        buf_rd=256.0,    # 8*8*4 IFM values fetched once
+        buf_wr=320.0,    # 8*8*5 OFM values written once
+        bus_vals=576.0,  # 256*mb + 320
+        xfer_psum=0.0,   # single C-block: no array-to-array forwards
+        acts=320.0,
+    )
+
+
+def test_minimal_buffer_fc_golden_counts():
+    # c_in=300 > n_c=256 -> cb=2: every OFM value crosses one psum link
+    t = get_dataflow("minimal_buffer").traffic_totals((FC,), ARCH)
+    assert t == dict(buf_rd=300.0, buf_wr=10.0, bus_vals=310.0,
+                     xfer_psum=10.0, acts=10.0)
+
+
+def test_minimal_buffer_conv_golden_energy():
+    # priced by hand off the Tab. III table at the 45nm corner (scale 1.0):
+    # global buffer = 281.3 pJ / 64-value line, scaled by sqrt(240) to
+    # chip-sized capacity; bus hops = 0.5*sqrt(240); links 0.30 pJ/bit
+    b = get_dataflow("minimal_buffer").energy_breakdown_img_j((CONV,), ARCH)
+    assert ARCH.energy_scale() == 1.0
+    gb = 281.3 / 64 * math.sqrt(240)
+    assert math.isclose(global_buffer_pj_per_value(ARCH), gb, rel_tol=1e-12)
+    assert math.isclose(mean_bus_hops(ARCH), 0.5 * math.sqrt(240),
+                        rel_tol=1e-12)
+    assert math.isclose(b["global_buffer"], (256 + 320) * gb * 1e-12,
+                        rel_tol=1e-12)
+    assert math.isclose(
+        b["bus_link"], 576 * 0.5 * math.sqrt(240) * 8 * 0.30 * 1e-12,
+        rel_tol=1e-12)
+    assert b["psum_link"] == 0.0 and b["psum_add"] == 0.0
+    assert math.isclose(b["act"], 320 * 0.0009 * 1e-12, rel_tol=1e-12)
+
+
+def test_minimal_buffer_movement_excludes_compute():
+    mb = get_dataflow("minimal_buffer")
+    layers = (CONV, FC)
+    b = mb.energy_breakdown_img_j(layers, ARCH)
+    assert math.isclose(
+        mb.movement_energy_img_j(layers, ARCH),
+        b["global_buffer"] + b["bus_link"] + b["psum_link"]
+        + mb.offchip_energy_img_j(layers, ARCH),
+        rel_tol=1e-12)
+
+
+def test_minimal_buffer_packs_denser_than_com_on_convs():
+    # im2col removes COM's K^2 kernel-pixel unrolling: fewer arrays on a
+    # conv-heavy network (the density-vs-locality trade the bench charts)
+    layers = tuple(resolve_network("resnet18-cifar").layers)
+    assert get_dataflow("minimal_buffer").n_arrays(layers, ARCH) \
+        < get_dataflow("com").n_arrays(layers, ARCH)
+
+
+# ---------------------------------------------------------------------------
+# property: both models emit finite non-negative traffic/energy
+# ---------------------------------------------------------------------------
+
+
+@given(k=st.integers(1, 3), c_in=st.integers(1, 48), c_out=st.integers(1, 48),
+       hw=st.integers(3, 16), f_in=st.integers(1, 512),
+       f_out=st.integers(1, 64))
+@settings(max_examples=25, deadline=None)
+def test_traffic_and_energy_nonnegative_finite(k, c_in, c_out, hw, f_in,
+                                               f_out):
+    layers = (
+        ConvSpec(name="c", k=k, c_in=c_in, c_out=c_out, h_in=hw, w_in=hw,
+                 padding=k // 2),
+        FCSpec(name="f", c_in=f_in, c_out=f_out),
+    )
+    for name in available_dataflows():
+        df = get_dataflow(name)
+        totals = df.traffic_totals(layers, ARCH)
+        assert set(totals) == set(df.TRAFFIC_FIELDS)
+        for v in totals.values():
+            assert np.isfinite(v) and v >= 0.0
+        for v in df.energy_breakdown_img_j(layers, ARCH).values():
+            assert np.isfinite(v) and v >= 0.0
+        assert df.onchip_energy_img_j(layers, ARCH) >= 0.0
+        assert df.movement_energy_img_j(layers, ARCH) >= 0.0
+        assert df.offchip_values_img(layers, ARCH) >= 0.0
+        assert df.n_arrays(layers, ARCH) >= 2  # one per layer minimum
+
+
+# ---------------------------------------------------------------------------
+# sweep integration: the dataflow axis
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_dataflow_axis_com_column_bitwise_and_rival_vs_oracle():
+    legacy = SweepGrid(networks=("vgg11-cifar",), chip_counts=(5, 10),
+                       e_mac_pj=(0.1,))
+    both = SweepGrid(networks=("vgg11-cifar",), chip_counts=(5, 10),
+                     e_mac_pj=(0.1,), dataflow=("com", "minimal_buffer"))
+    r_legacy = run_sweep(legacy)
+    r_both = run_sweep(both)
+    scen = both.scenarios()
+    com_idx = [i for i, s in enumerate(scen) if s.dataflow == "com"]
+    for c in r_legacy.columns:
+        # trailing axis: com rows are the even rows, bitwise the old grid
+        assert (r_both.columns[c][com_idx] == r_legacy.columns[c]).all()
+    for i, s in enumerate(scen):
+        ref = evaluate_scenario(s)
+        for c in r_both.columns:
+            assert r_both.columns[c][i] == pytest.approx(ref[c], rel=1e-9)
+
+
+def test_rival_scenario_columns_differ_from_com():
+    com = evaluate_scenario(Scenario(network="resnet18-cifar", n_chips=10,
+                                     precision_bits=8, e_mac_pj=0.1))
+    riv = evaluate_scenario(Scenario(network="resnet18-cifar", n_chips=10,
+                                     precision_bits=8, e_mac_pj=0.1,
+                                     dataflow="minimal_buffer"))
+    assert riv["n_tiles"] < com["n_tiles"]
+    assert riv["onchip_w"] > com["onchip_w"]  # buffer traffic costs more
+    assert riv["ce_tops_w"] < com["ce_tops_w"]
+    assert riv["ops"] == com["ops"]           # same workload, same silicon
+    assert riv["exec_us"] == com["exec_us"]   # shared timing model
+
+
+def test_grid_rejects_unknown_dataflow():
+    from repro.sweep.scenario import SweepValidationError
+
+    with pytest.raises(SweepValidationError, match="dataflow"):
+        SweepGrid(networks=("vgg11-cifar",), chip_counts=(5,),
+                  dataflow=("com", "nope"))
+
+
+# ---------------------------------------------------------------------------
+# cache_stats surface
+# ---------------------------------------------------------------------------
+
+
+def test_cache_stats_reports_dataflow_caches():
+    layers = tuple(resolve_network("vgg11-cifar").layers)
+    mb = get_dataflow("minimal_buffer")
+    mb.traffic_totals(layers, ARCH)
+    before = mb.cache_infos()["traffic_totals"].hits
+    mb.traffic_totals(layers, ARCH)  # second call must hit
+    assert mb.cache_infos()["traffic_totals"].hits == before + 1
+
+    dataflow_summary("minimal_buffer", "vgg11-cifar", ARCH)
+    stats = cache_stats()
+    assert "dataflow_summary" in stats
+    for name in available_dataflows():
+        assert f"dataflow:{name}:traffic_totals" in stats
+        assert f"dataflow:{name}:summary_overrides" in stats
+    assert set(dataflow_cache_stats()) <= set(stats)
+
+
+def test_every_model_has_identity_and_declared_fields():
+    for name in available_dataflows():
+        df = get_dataflow(name)
+        assert isinstance(df, DataflowModel)
+        assert df.name == name and df.cite
+        assert len(df.TRAFFIC_FIELDS) > 0
+    # the registry module keeps singletons: repeat lookups share caches
+    assert get_dataflow("com") is dataflows_base._REGISTRY["com"]

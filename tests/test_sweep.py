@@ -149,9 +149,10 @@ def test_arch_axes_default_keeps_legacy_grid_shape():
     singletons, appended after e_mac in the row-major product."""
     grid = SweepGrid(networks=("vgg11-cifar",), chip_counts=(5,),
                      precisions=(8,), e_mac_pj=(0.02, 0.1))
-    assert grid.shape == (1, 1, 1, 2, 1, 1, 1, 1)
+    assert grid.shape == (1, 1, 1, 2, 1, 1, 1, 1, 1)
     s = grid.scenarios()[0]
     assert (s.tiles_per_chip, s.n_c, s.n_m, s.node_nm) == (240, 256, 256, 45.0)
+    assert s.dataflow == "com"
     # and the as_dict/from_dict roundtrip carries the new axes
     assert SweepGrid.from_dict(grid.as_dict()) == grid
 

@@ -161,7 +161,7 @@ def test_batch_has_no_per_scenario_objects():
     batch = build_batch(grid)
     assert batch.n_scenarios == 10_000
     assert batch.chips.shape == (100,) and batch.e_mac.shape == (100,)
-    assert batch.summary["n_tiles"].shape == (1, 1, 1, 1, 1)
+    assert batch.summary["n_tiles"].shape == (1, 1, 1, 1, 1, 1)
 
 
 def test_result_rows_omitted_above_threshold():

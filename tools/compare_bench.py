@@ -143,18 +143,48 @@ TRAFFIC_METRICS: List[Tuple[str, str]] = [
     ("wall_s", "perf"),
 ]
 
+# rivals artifact (benchmarks/rivals_bench.py): the COM-vs-rival dataflow
+# head-to-head. Every ratio is a deterministic closed-form comparison on
+# the shared ArchSpec/EnergyTable (no RNG, no wall-clock denominators), so
+# per-network energy/movement ratios, the com_wins/searched-beats-rival
+# booleans, and the crossover-geometry counts are all fidelity-class;
+# registry_version pins the dataflow-model generation the baseline was
+# produced under.
+RIVALS_METRICS: List[Tuple[str, str]] = [
+    ("registry_version", "fidelity"),
+    ("energy_ratio_mean", "fidelity"),
+    ("movement_ratio_mean", "fidelity"),
+    ("com_wins_all", "fidelity"),
+    ("searched_beats_rival_all", "fidelity"),
+    ("networks.vgg11-cifar.energy_ratio", "fidelity"),
+    ("networks.vgg16-imagenet.energy_ratio", "fidelity"),
+    ("networks.vgg19-imagenet.energy_ratio", "fidelity"),
+    ("networks.resnet18-cifar.energy_ratio", "fidelity"),
+    ("networks.vgg11-cifar.movement_ratio", "fidelity"),
+    ("networks.vgg16-imagenet.movement_ratio", "fidelity"),
+    ("networks.vgg19-imagenet.movement_ratio", "fidelity"),
+    ("networks.resnet18-cifar.movement_ratio", "fidelity"),
+    ("crossover.n_geometries", "fidelity"),
+    ("crossover.n_rival_wins", "fidelity"),
+    ("wall_s", "perf"),
+]
+
 METRICS_BY_KIND: Dict[str, List[Tuple[str, str]]] = {
     "sweep": SWEEP_METRICS,
     "serve": SERVE_METRICS,
     "executor": EXECUTOR_METRICS,
     "search": SEARCH_METRICS,
     "traffic": TRAFFIC_METRICS,
+    "rivals": RIVALS_METRICS,
 }
 
 
 def detect_kind(payload: Dict) -> str:
     if "ttft_p99_ticks" in payload:
         return "traffic"
+    if "rival" in payload and "crossover" in payload:
+        # before "search": both payloads carry energy_ratio_mean
+        return "rivals"
     if "searched_le_greedy" in payload:
         return "search"
     if "batches" in payload and "events_match" in payload:
