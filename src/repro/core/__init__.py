@@ -34,13 +34,18 @@ def cache_stats() -> Dict[str, "object"]:
     limit; this helper is the one place to watch their hit rates and
     occupancy (e.g. from a sweep driver or a memory investigation).
     """
-    from repro.core.program import _compile_candidate, _compile_program
+    from repro.core.program import (
+        _compile_candidate,
+        _compile_program,
+        _compile_program_faulted,
+    )
     from repro.core.schedule import _layer_schedules
     from repro.core.simulator import _network_event_totals, layer_table
 
     stats = {
         "compile_program": _compile_program.cache_info(),
         "compile_candidate": _compile_candidate.cache_info(),
+        "compile_faulted": _compile_program_faulted.cache_info(),
         "layer_schedules": _layer_schedules.cache_info(),
         "layer_table": layer_table.cache_info(),
         "network_event_totals": _network_event_totals.cache_info(),
@@ -52,6 +57,9 @@ def cache_stats() -> Dict[str, "object"]:
     if engine is not None:
         stats["network_summary"] = engine._network_summary.cache_info()
         stats["dataflow_summary"] = engine._dataflow_summary.cache_info()
+    faults = sys.modules.get("repro.faults.model")
+    if faults is not None:
+        stats["chip_segments"] = faults.chip_segments.cache_info()
     search = sys.modules.get("repro.search")
     if search is not None:
         stats["search_mapping"] = search._search_mapping.cache_info()

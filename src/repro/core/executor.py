@@ -194,7 +194,7 @@ class ProgramExecutor:
     def __init__(self, program, weights, *, backend: str = "numpy",
                  interpret: Optional[bool] = None,
                  block_m: Optional[int] = None, block_n: Optional[int] = None,
-                 block_k: Optional[int] = None, shard=None):
+                 block_k: Optional[int] = None, shard=None, faults=None):
         if backend not in BACKENDS:
             raise ValueError(
                 f"unknown executor backend {backend!r}; available: {list(BACKENDS)}")
@@ -205,6 +205,19 @@ class ProgramExecutor:
         layers = program.workload.layers
         self.input_shape = _chain_shapes(layers)[0]
         self.weights = self._resolve_weights(layers, weights)
+        # weight-cell faults / tile dropout realize HERE, on the resolved
+        # float64 list both backends consume — so the numpy oracle and the
+        # Pallas path see byte-identical faulted weights by construction.
+        # faults=None inherits the program's own FaultSet (a fault-compiled
+        # program executes its faults without restating them).
+        self.faults = faults if faults is not None \
+            else getattr(program, "faults", None)
+        self.fault_info: Optional[Dict[str, float]] = None
+        if self.faults is not None and self.faults.has_workload_faults:
+            from repro.faults.inject import apply_weight_faults
+
+            self.weights, self.fault_info = apply_weight_faults(
+                layers, self.weights, self.faults, program.arch)
         self._events: Optional[Dict[str, int]] = None
         self._jax_forward = None
         self._mesh = self._resolve_shard(shard, backend)

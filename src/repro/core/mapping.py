@@ -98,13 +98,26 @@ def tiles_for(layer, arch: ArchSpec = DEFAULT_ARCH) -> Tuple[int, Tuple[int, int
     return cb * mb, (1, cb, mb)
 
 
-def greedy_place(layers: List, arch: ArchSpec = DEFAULT_ARCH) -> List[TileAlloc]:
+def greedy_place(layers: List, arch: ArchSpec = DEFAULT_ARCH,
+                 faults=None) -> List[TileAlloc]:
     """Greedy in-order placement pass; per-layer allocations w/ chip ids.
 
     This is the placement *algorithm*; ``repro.core.program
     .compile_program`` is the public entry point that runs (and caches) it
     as part of building a ``CompiledProgram``.
+
+    ``faults`` (a :class:`repro.faults.FaultSet`) switches to the
+    fault-aware walk: chips contribute only their longest healthy
+    serpentine segment, layers spill past dead tiles/links/chips (the
+    off-chip cost model prices every extra crossing), and a bounded fleet
+    raises :class:`repro.faults.FaultCapacityError` when the workload no
+    longer fits. An empty FaultSet reproduces the pristine placement
+    bitwise.
     """
+    if faults is not None and not faults.is_empty:
+        from repro.faults.place import fault_place
+
+        return fault_place(list(layers), arch, faults)
     tiles_per_chip = arch.tiles_per_chip
     allocs: List[TileAlloc] = []
     chip, used = 0, 0

@@ -166,6 +166,9 @@ class CompiledProgram:
     # carries the realized MappingCandidate for provenance
     mapping: str = "greedy"
     candidate: object = None
+    # the FaultSet the placement degraded around (None = pristine fabric);
+    # the executor also reads it as the default for weight-fault injection
+    faults: object = None
 
     @property
     def n_tiles(self) -> int:
@@ -274,6 +277,36 @@ def _compile_program(workload: Workload, arch: ArchSpec) -> CompiledProgram:
     )
 
 
+# Bounded and separate from _compile_program for the same reason as the
+# candidate cache: fault experiments (yield sweeps compile hundreds of
+# FaultSets) must never evict the pristine hot lines. Per-layer events are
+# the same closed forms as the pristine compile — event counts depend on
+# layers + arch, not on which chips the tiles landed on — so executor
+# event accounting holds unchanged under degraded placements; what a
+# FaultSet changes is the placement itself (chip spill, crossings), which
+# the off-chip cost model prices. Introspect via repro.core.cache_stats().
+@lru_cache(maxsize=64)
+def _compile_program_faulted(workload: Workload, arch: ArchSpec,
+                             faults) -> CompiledProgram:
+    layers = workload.layers
+    allocs = tuple(greedy_place(list(layers), arch, faults=faults))
+    per_layer_events = batched_layer_events(layer_table(layers), arch)
+    programs: List[LayerProgram] = []
+    for i, (layer, alloc) in enumerate(zip(layers, allocs)):
+        cb, mb, blocks = _blocks_for(layer, arch)
+        programs.append(LayerProgram(
+            layer=layer, arch=arch, alloc=alloc, c_blocks=cb, m_blocks=mb,
+            blocks=blocks,
+            events={f: int(per_layer_events[f][i]) for f in EVENT_FIELDS},
+        ))
+    return CompiledProgram(
+        workload=workload, arch=arch, layer_programs=tuple(programs),
+        allocs=allocs,
+        event_totals={f: int(per_layer_events[f].sum()) for f in EVENT_FIELDS},
+        faults=faults,
+    )
+
+
 # Bounded like _compile_program; separate cache so greedy compile lines
 # (the hot path every consumer shares) are never evicted by search
 # experiments. Introspect via repro.core.cache_stats().
@@ -310,7 +343,7 @@ def _compile_candidate(workload: Workload, arch: ArchSpec,
 
 
 def compile_program(workload, arch: ArchSpec = DEFAULT_ARCH,
-                    mapping="greedy") -> CompiledProgram:
+                    mapping="greedy", faults=None) -> CompiledProgram:
     """Compile a workload for an architecture — THE evaluation entry point.
 
     One call derives everything the stack consumes: tile placement
@@ -330,14 +363,33 @@ def compile_program(workload, arch: ArchSpec = DEFAULT_ARCH,
     * a :class:`repro.search.space.MappingCandidate` — realize that exact
       candidate (validated; raises ``ValueError`` if illegal).
 
-    Memoized on the frozen ``(workload, arch[, candidate])`` key —
-    workload equality keys on the layer tuple, so anonymous and named
-    workloads over the same layers share one program, and repeated sweep
-    scenarios get their compilation for free. ``workload`` may be a
+    ``faults`` (a :class:`repro.faults.FaultSet`) compiles around a
+    degraded fabric: greedy placement excludes dead tiles/links/chips,
+    spilling to spare chips (the off-chip cost model prices the extra
+    crossings) or raising :class:`repro.faults.FaultCapacityError` on a
+    bounded fleet. ``FaultSet.empty()`` (or ``None``) normalizes to the
+    pristine compile path — the *same* cached ``CompiledProgram``, so the
+    no-fault case is bitwise-identical by construction. Fault compilation
+    currently applies to the greedy mapping only (searched/candidate
+    mappings validate against faults via ``validate_candidate`` but are
+    not re-placed).
+
+    Memoized on the frozen ``(workload, arch[, candidate][, faults])``
+    key — workload equality keys on the layer tuple, so anonymous and
+    named workloads over the same layers share one program, and repeated
+    sweep scenarios get their compilation for free. ``workload`` may be a
     :class:`Workload` or any layer sequence (wrapped via
     :meth:`Workload.of`).
     """
     wl = Workload.of(workload)
+    if faults is not None and not faults.is_empty:
+        if mapping != "greedy":
+            raise ValueError(
+                f"compile_program(faults=...) re-places with the greedy "
+                f"walk; mapping={mapping!r} is not supported with a "
+                "non-empty FaultSet (validate candidates against faults "
+                "with repro.search.space.validate_candidate instead)")
+        return _compile_program_faulted(wl, arch, faults)
     if isinstance(mapping, str):
         if mapping == "greedy":
             return _compile_program(wl, arch)

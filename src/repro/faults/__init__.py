@@ -1,0 +1,54 @@
+"""Seeded, deterministic fault injection from fabric to serving tier.
+
+One frozen :class:`FaultSet` threads through every layer of the stack:
+
+* **compile** — ``compile_program(workload, arch, faults=...)`` places
+  layers around dead tiles/links/chips on the longest healthy serpentine
+  runs, spilling to spare chips (priced by the existing off-chip cost
+  model) or raising :class:`FaultCapacityError` on a bounded fleet;
+* **execute** — weight-cell faults and logical-tile dropout are realized
+  once on the resolved float64 weights, so the NumPy oracle and the
+  Pallas kernel path consume byte-identical faulted arrays;
+* **serve** — :class:`TransientFaults` injects seeded slot/page failures
+  into ``Engine.serve``, recovered by re-prefill under
+  ``repro.runtime.fault_tolerance.RestartPolicy``, next to per-request
+  admission deadlines in :class:`repro.serve.admission.AdmissionQueue`.
+
+See docs/faults.md for the model and its degradation semantics;
+``benchmarks/faults_bench.py`` emits the CI-gated resilience curves.
+"""
+from repro.faults.inject import apply_weight_faults
+from repro.faults.model import (
+    CELL_KINDS,
+    BlockFault,
+    FaultCapacityError,
+    FaultSet,
+    WeightFault,
+    chip_segments,
+    fleet_capacity,
+    span_conflicts,
+    usable_tiles,
+)
+from repro.faults.place import (
+    degraded_chips,
+    fault_place,
+    validate_fault_allocs,
+)
+from repro.faults.transient import TransientFaults
+
+__all__ = [
+    "BlockFault",
+    "CELL_KINDS",
+    "FaultCapacityError",
+    "FaultSet",
+    "TransientFaults",
+    "WeightFault",
+    "apply_weight_faults",
+    "chip_segments",
+    "degraded_chips",
+    "fault_place",
+    "fleet_capacity",
+    "span_conflicts",
+    "usable_tiles",
+    "validate_fault_allocs",
+]

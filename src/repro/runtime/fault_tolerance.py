@@ -53,7 +53,13 @@ class StragglerDetector:
     window: int = 32
     z_thresh: float = 4.0
     min_samples: int = 8
-    _times: Dict[int, deque] = field(default_factory=lambda: defaultdict(lambda: deque(maxlen=32)))
+    _times: Dict[int, deque] = field(init=False, repr=False, default=None)
+
+    def __post_init__(self):
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+        # the deque bound must follow the configured window, not a literal
+        self._times = defaultdict(lambda: deque(maxlen=self.window))
 
     def record(self, host_id: int, step_time_s: float):
         self._times[host_id].append(step_time_s)

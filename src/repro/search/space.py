@@ -190,7 +190,8 @@ def validate_alloc(alloc: TileAlloc, arch: ArchSpec) -> None:
 
 
 def validate_allocs(allocs: Sequence[TileAlloc], arch: ArchSpec,
-                    starts: Optional[Sequence[int]] = None) -> None:
+                    starts: Optional[Sequence[int]] = None,
+                    faults=None) -> None:
     """A whole placement's legality; raises ``ValueError``.
 
     ``starts`` are the flat start positions of each span; when omitted the
@@ -199,7 +200,24 @@ def validate_allocs(allocs: Sequence[TileAlloc], arch: ArchSpec,
     allocation (:func:`validate_alloc`), that spans do not overlap, and
     that each span's chip ids match its flat extent — which together bound
     every chip's occupancy at ``tiles_per_chip``.
+
+    ``faults`` (a :class:`repro.faults.FaultSet`) switches to the
+    degraded-fabric legality model: tiles may only land on healthy
+    serpentine segments, every chip's load is bounded by its longest
+    segment, and dead chips are excluded — the rules fault-compiled
+    programs must satisfy (``starts`` does not apply: degraded placements
+    are validated against the canonical occupancy walk).
     """
+    if faults is not None and not faults.is_empty:
+        from repro.faults.place import validate_fault_allocs
+
+        if starts is not None:
+            raise ValueError(
+                "validate_allocs(faults=...) validates the degraded "
+                "occupancy walk; explicit starts only apply to the "
+                "pristine flat-span model")
+        validate_fault_allocs(allocs, arch, faults)
+        return
     tpc = arch.tiles_per_chip
     if starts is None:
         starts = []
@@ -261,13 +279,19 @@ def validate_blocks(layer, block_c: int, block_m: int,
 
 def validate_candidate(layers: Sequence, arch: ArchSpec,
                        cand: MappingCandidate,
-                       max_chips: Optional[int] = None) -> None:
+                       max_chips: Optional[int] = None,
+                       faults=None) -> None:
     """Full candidate legality; raises ``ValueError``.
 
     Field shapes/domains, per-layer blocking bounds, the realized
     placement (:func:`validate_allocs` on the gap-cumulative starts), and
     optionally a chip budget (the search engines pin ``max_chips`` to the
     greedy chip count so padding can never inflate the fleet).
+
+    ``faults`` (a :class:`repro.faults.FaultSet`) additionally requires
+    every realized span to avoid dead tiles, dead chips, and dead
+    serpentine links (and to fit a bounded fleet) — the hook that lets
+    the search engines' legality model express unavailable resources.
     """
     n = len(layers)
     for fname in ("gaps", "block_c", "block_m", "order", "egress_rot"):
@@ -300,6 +324,18 @@ def validate_candidate(layers: Sequence, arch: ArchSpec,
         if chips > max_chips:
             raise ValueError(
                 f"candidate needs {chips} chips, budget is {max_chips}")
+    if faults is not None and not faults.is_empty:
+        from repro.faults.model import span_conflicts
+
+        problems: List[str] = []
+        for a, start in zip(allocs, starts):
+            for p in span_conflicts(start, a.n_tiles, faults, arch):
+                problems.append(
+                    f"layer {getattr(a.layer, 'name', '?')!r}: {p}")
+        if problems:
+            raise ValueError(
+                "candidate conflicts with the fault set:\n"
+                + "\n".join(problems))
 
 
 # ---------------------------------------------------------------------------

@@ -76,11 +76,18 @@ class Arrival:
 
 @dataclass(frozen=True)
 class Rejection:
-    """A request refused at admission time, with the reason."""
+    """A request refused at admission time, with the reason.
+
+    ``time`` is the virtual-clock instant the rejection was recorded (the
+    ``poll`` that diverted the request), so rejection streams are
+    auditable against the arrival trace. It defaults to ``0.0`` for
+    compatibility with pre-deadline constructors.
+    """
 
     index: int
     request: Any
     reason: str
+    time: float = 0.0
 
 
 class AdmissionQueue:
@@ -159,6 +166,12 @@ class AdmissionQueue:
                 f"max_new_tokens={req.max_new_tokens} < 1: a zero-budget "
                 "request has nothing to generate"
             )
+        deadline = getattr(req, "deadline", None)
+        if deadline is not None and deadline <= 0:
+            return (
+                f"deadline={deadline} <= 0 ticks: the admission deadline "
+                "is relative to arrival and must be positive"
+            )
         if self.max_seq is not None:
             need = len(req.prompt) + req.max_new_tokens
             if need > self.max_seq:
@@ -171,15 +184,50 @@ class AdmissionQueue:
             return self.validator(req)
         return None
 
+    def _deadline_of(self, a: Arrival) -> Optional[float]:
+        """Absolute virtual-clock instant by which the request must be
+        *admitted* (popped to a slot), or None if it has no deadline.
+        ``Request.deadline`` is relative to arrival time."""
+        d = getattr(a.request, "deadline", None)
+        return None if d is None else a.time + d
+
+    def _reject(self, idx: int, req, reason: str, now: float) -> None:
+        if hasattr(req, "rejected"):
+            req.rejected = reason
+        self.rejected.append(Rejection(idx, req, reason, time=now))
+
     def poll(self, now: float) -> int:
         """Move arrivals due at ``now`` into the ready set; returns how
         many became ready. Rejections divert to :attr:`rejected` (the
-        arrival still consumes its index, keeping key chains stable)."""
+        arrival still consumes its index, keeping key chains stable).
+
+        Deadlines are enforced here, not mid-decode: a ready request whose
+        admission deadline has lapsed (``now > arrival + deadline``) is
+        purged to :attr:`rejected` with a ``deadline exceeded`` reason and
+        the rejection's virtual-clock timestamp, and an arrival that is
+        already past-deadline on intake (the engine fast-forwarded over
+        it) is diverted the same way.
+        """
         if now < self._last_poll:
             raise ValueError(
                 f"poll time ran backwards: {now} after {self._last_poll}"
             )
         self._last_poll = now
+        # purge ready entries whose admission deadline lapsed while they
+        # waited for a slot
+        kept: List[Tuple[int, Arrival]] = []
+        for idx, a in self._ready:
+            dl = self._deadline_of(a)
+            if dl is not None and now > dl:
+                self._reject(
+                    idx, a.request,
+                    f"deadline exceeded: admitted-by deadline was t={dl} "
+                    f"(arrival {a.time} + deadline "
+                    f"{getattr(a.request, 'deadline', None)}), now t={now}",
+                    now)
+            else:
+                kept.append((idx, a))
+        self._ready = kept
         added = 0
         while True:
             a = self._pull()
@@ -192,10 +240,15 @@ class AdmissionQueue:
             if hasattr(req, "arrival_time"):
                 req.arrival_time = a.time
             reason = self.check_request(req)
+            if reason is None:
+                dl = self._deadline_of(a)
+                if dl is not None and now > dl:
+                    reason = (
+                        f"deadline exceeded: admitted-by deadline was "
+                        f"t={dl} (arrival {a.time} + deadline "
+                        f"{req.deadline}), first poll at t={now}")
             if reason is not None:
-                if hasattr(req, "rejected"):
-                    req.rejected = reason
-                self.rejected.append(Rejection(idx, req, reason))
+                self._reject(idx, req, reason, now)
                 continue
             self._ready.append((idx, a))
             added += 1
@@ -223,8 +276,13 @@ class AdmissionQueue:
     def push_back(self, idx: int, req) -> None:
         """Return an admitted-but-not-started request to the head of the
         ready set (the engine defers admission when the page pool cannot
-        yet reserve the request's worst case)."""
-        self._ready.insert(0, (idx, Arrival(self._last_poll, req)))
+        yet reserve the request's worst case). The original arrival time
+        is preserved so an admission deadline keeps counting from the true
+        arrival, not the defer."""
+        t = getattr(req, "arrival_time", None)
+        if t is None:
+            t = self._last_poll
+        self._ready.insert(0, (idx, Arrival(t, req)))
 
     # -------------------- introspection --------------------
     def next_arrival_time(self) -> Optional[float]:

@@ -86,6 +86,10 @@ class Request:
     temperature: float = 0.0
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    # admission deadline in virtual-clock ticks *relative to arrival*: the
+    # request must reach a slot by arrival_time + deadline or the queue
+    # diverts it to .rejected ("deadline exceeded"). None = no deadline.
+    deadline: Optional[float] = None
     # --- serving-tier accounting (virtual-clock ticks) ---
     arrival_time: float = 0.0
     admitted_time: Optional[float] = None   # = first-token time (prefill)
@@ -315,7 +319,9 @@ class Engine:
         return requests
 
     def serve(self, queue: AdmissionQueue, *, seed: int = 0,
-              do_sample: bool = True, step_time: float = 1.0) -> List[Request]:
+              do_sample: bool = True, step_time: float = 1.0,
+              faults=None, restart_policy=None,
+              backoff_cap: float = 64.0) -> List[Request]:
         """Drive the slot pool from an admission queue over a (possibly
         lazy) arrival stream. The queue's virtual clock advances
         ``step_time`` per decode step and fast-forwards to the next
@@ -327,22 +333,47 @@ class Engine:
         rows still select the argmax bit-exactly) but compiles the fold +
         categorical. Returns the completed requests in finish order;
         ``last_stats`` gains streaming fields (n_rejected,
-        makespan_ticks, ...) on top of the legacy counters."""
+        makespan_ticks, ...) on top of the legacy counters.
+
+        ``faults`` (a :class:`repro.faults.TransientFaults`) injects
+        seeded per-step slot/page failures; a failed slot's step result is
+        discarded and the slot recovers by **retry-and-re-prefill** under
+        ``restart_policy`` (a :class:`repro.runtime.fault_tolerance
+        .RestartPolicy`, default budget if None): backoff advances the
+        virtual clock by ``min(policy.backoff(), backoff_cap)`` ticks and
+        the slot's known-good context (prompt + tokens emitted so far) is
+        re-prefilled before decoding resumes. A fault that repeats at the
+        same (request, token) point three times — or exhausts the restart
+        budget — halts the loop with ``RuntimeError`` (deterministic
+        faults must not burn the fleet). Requests in unaffected slots
+        produce token-identical output with or without injection.
+        """
         self._family_guards()
         stats = self._serve_loop(queue, seed=seed, do_sample=do_sample,
-                                 step_time=step_time)
+                                 step_time=step_time, faults=faults,
+                                 restart_policy=restart_policy,
+                                 backoff_cap=backoff_cap)
         self.last_stats = stats
         return stats.pop("_completed")
 
     # -------------------- the shared serve loop --------------------
     def _serve_loop(self, queue: AdmissionQueue, *, seed: int,
-                    do_sample: bool, step_time: float = 1.0) -> Dict[str, Any]:
+                    do_sample: bool, step_time: float = 1.0,
+                    faults=None, restart_policy=None,
+                    backoff_cap: float = 64.0) -> Dict[str, Any]:
         B = self.batch
         base_key = jax.random.PRNGKey(seed)
         slots = self.slots
         paged = self.paged
         clock = queue.clock
         state: List[Optional[_SlotState]] = [None] * B
+        if faults is not None and faults.is_empty:
+            faults = None  # empty injection == no injection, bitwise
+        policy = restart_policy
+        if faults is not None and policy is None:
+            from repro.runtime.fault_tolerance import RestartPolicy
+
+            policy = RestartPolicy()
 
         tok = jnp.zeros((B,), jnp.int32)
         pos = jnp.full((B,), self.max_seq, jnp.int32)  # parked: no writes
@@ -354,6 +385,7 @@ class Engine:
         stats: Dict[str, Any] = dict(
             decode_steps=0, generated_tokens=0, prefills=0,
             occupancy_sum=0, admission_order=[], batch=B,
+            faults_injected=0, retries=0, reprefills=0,
         )
 
         def worst_pages(req: Request) -> int:
@@ -448,15 +480,63 @@ class Engine:
                     self.params, slots.cache, tok, pos, keys, steps, temps,
                     do_sample,
                 )
+            step_no = stats["decode_steps"]
             stats["decode_steps"] += 1
             stats["occupancy_sum"] += n_active
             clock.advance(step_time)
             steps = steps + 1
             pos = pos + 1
+            failed: set = set()
+            if faults is not None:
+                active = [(b, st.index, st.produced)
+                          for b, st in enumerate(state) if st is not None]
+                held = ([slots.pages_held(b) for b, _, _ in active]
+                        if paged else None)
+                failed = set(faults.failed_slots(step_no, active, held))
+            for b in sorted(failed):
+                # this step's result for slot b is LOST: the sampled token
+                # is discarded (never harvested) and the slot's KV row is
+                # treated as corrupt. Recovery = backoff, then re-prefill
+                # the known-good context (prompt + tokens emitted so far;
+                # the last emitted token is the next decode input, earlier
+                # ones are already consumed) and rebuild the PRNG chain the
+                # healthy path would hold — so the retried step resamples
+                # the exact token the faulted step would have produced.
+                st = state[b]
+                req = st.req
+                stats["faults_injected"] += 1
+                attempt = st.index * 1_000_000 + st.produced
+                action = policy.on_fault(attempt)
+                if action == "halt":
+                    raise RuntimeError(
+                        f"serve loop halted after repeated faults at "
+                        f"request {st.index}, token {st.produced} "
+                        f"(restart budget {policy.max_restarts})")
+                stats["retries"] += 1
+                clock.advance(min(policy.backoff(), backoff_cap))
+                ctx = [int(t) for t in req.prompt] + [
+                    int(t) for t in req.out_tokens[:-1]]
+                prompt = jnp.asarray(ctx, jnp.int32)[None, :]
+                _, one = self._prefill(self.params, prompt, slots.template)
+                stats["reprefills"] += 1
+                if paged:
+                    # pages stay reserved/held across the retry; the
+                    # corrupt row is overwritten by the next decode write
+                    slots.ensure_rows(b, prompt.shape[1])
+                    req.pages_peak = max(req.pages_peak or 0,
+                                         slots.pages_held(b))
+                slots.write_prefill(b, one)
+                k = jax.random.fold_in(base_key, st.index)
+                for t in range(st.produced - 1):
+                    k = jax.random.fold_in(k, t)
+                tok = tok.at[b].set(int(req.out_tokens[-1]))
+                pos = pos.at[b].set(prompt.shape[1])
+                keys = keys.at[b].set(k)
+                steps = steps.at[b].set(st.produced - 1)
             toks_np = np.asarray(jax.device_get(tok))
             for b in range(B):
                 st = state[b]
-                if st is None:
+                if st is None or b in failed:
                     continue
                 t = int(toks_np[b])
                 st.req.out_tokens.append(t)

@@ -116,7 +116,7 @@ class LengthMix:
 _PROFILE_FIELDS = {
     "name", "num_requests", "arrival", "num_users",
     "requests_per_user_tick", "burst_size", "prompt_lens", "output_lens",
-    "temperature", "seed",
+    "temperature", "seed", "deadline",
 }
 
 
@@ -147,6 +147,10 @@ class TrafficProfile:
     burst_size: int = 8
     temperature: float = 0.0
     seed: int = 0
+    # admission deadline (virtual ticks relative to each arrival); a
+    # request not admitted to a slot in time is diverted to the queue's
+    # rejected list with a "deadline exceeded" reason. None = patient.
+    deadline: Optional[float] = None
 
     def __post_init__(self):
         _require(isinstance(self.name, str) and self.name != "",
@@ -165,6 +169,8 @@ class TrafficProfile:
                  f"burst_size must be >= 1, got {self.burst_size}")
         _require(self.temperature >= 0,
                  f"temperature must be >= 0, got {self.temperature}")
+        _require(self.deadline is None or self.deadline > 0,
+                 f"deadline must be > 0 ticks (or None), got {self.deadline}")
 
     @property
     def rate(self) -> float:
@@ -228,7 +234,8 @@ def generate_arrivals(profile: TrafficProfile, vocab_size: int) -> List[Arrival]
     for i in range(n):
         prompt = rng.randint(1, vocab_size, size=int(plens[i])).astype(np.int32)
         req = Request(prompt=prompt, max_new_tokens=int(budgets[i]),
-                      temperature=profile.temperature)
+                      temperature=profile.temperature,
+                      deadline=profile.deadline)
         arrivals.append(Arrival(float(times[i]), req))
     return arrivals
 
@@ -262,15 +269,28 @@ def simulate(engine, profile: TrafficProfile, *, policy: str = "fifo",
     def pct(a: np.ndarray, q: float) -> float:
         return float(np.percentile(a, q)) if a.size else 0.0
 
+    # schema_version 2: adds the rejection audit trail (per-rejection
+    # virtual-clock timestamps + reasons, deadline counts). Additive only —
+    # payloads from version 1 baselines stay comparable on shared keys.
     payload: Dict[str, Any] = dict(
+        schema_version=2,
         profile=profile.name,
         arrival=profile.arrival,
         policy=policy,
         seed=profile.seed,
         temperature=profile.temperature,
+        deadline=profile.deadline,
         n_requests=profile.num_requests,
         n_accepted=len(accepted),
         n_rejected=len(queue.rejected),
+        n_deadline_rejected=sum(
+            1 for rj in queue.rejected
+            if rj.reason.startswith("deadline exceeded")
+        ),
+        rejections=[
+            dict(index=rj.index, time=rj.time, reason=rj.reason)
+            for rj in queue.rejected
+        ],
         generated_tokens=stats["generated_tokens"],
         decode_steps=stats["decode_steps"],
         prefills=stats["prefills"],

@@ -1,0 +1,164 @@
+"""runtime.fault_tolerance policy layer — the pieces test_infra.py's
+smoke coverage misses (ISSUE 10 satellites):
+
+* StragglerDetector regression: the per-host deque bound must follow the
+  configured ``window`` (it was hardcoded to 32 regardless);
+* RestartPolicy restart-budget exhaustion and backoff monotonicity;
+* HeartbeatMonitor treats never-beaten hosts as dead from the start;
+* Supervisor end-to-end: fault → backoff → restore → completion with the
+  exact log sequence, and the halt path (same-step fault x3 raises).
+"""
+import pytest
+
+from repro.runtime.fault_tolerance import (
+    HeartbeatMonitor,
+    RestartPolicy,
+    StragglerDetector,
+    Supervisor,
+)
+
+
+# -------------------- StragglerDetector --------------------
+
+def test_straggler_window_is_respected():
+    """Regression: with window=4, only the last 4 samples per host may
+    survive — the old hardcoded maxlen=32 kept all 20 and poisoned the
+    mean with stale history."""
+    sd = StragglerDetector(window=4, min_samples=2)
+    for _ in range(20):
+        sd.record(0, 1.0)
+    assert len(sd._times[0]) == 4
+    # a host that was slow long ago but recovered must NOT be flagged:
+    # only its recent window counts
+    sd = StragglerDetector(window=4, z_thresh=4.0, min_samples=4)
+    for h in range(3):
+        for _ in range(8):
+            sd.record(h, 1.0)
+    for _ in range(16):
+        sd.record(3, 50.0)   # old, slow...
+    for _ in range(4):
+        sd.record(3, 1.0)    # ...but the recent window is healthy
+    assert sd.stragglers() == []
+
+
+def test_straggler_window_larger_than_default():
+    sd = StragglerDetector(window=100)
+    for _ in range(100):
+        sd.record(0, 1.0)
+    assert len(sd._times[0]) == 100  # old bug capped this at 32
+
+
+def test_straggler_window_validated():
+    with pytest.raises(ValueError, match="window"):
+        StragglerDetector(window=0)
+
+
+# -------------------- RestartPolicy --------------------
+
+def test_restart_budget_exhaustion_halts():
+    rp = RestartPolicy(max_restarts=2)
+    assert rp.on_fault(step=1) == "restart"
+    assert rp.on_fault(step=2) == "restart"
+    # third fault (all distinct steps) exceeds the budget
+    assert rp.on_fault(step=3) == "halt"
+
+
+def test_backoff_is_monotone_exponential():
+    rp = RestartPolicy(max_restarts=100, backoff_s=0.5, backoff_mult=2.0)
+    backoffs = []
+    for step in range(4):
+        rp.on_fault(step=step)
+        backoffs.append(rp.backoff())
+    assert backoffs == [0.5, 1.0, 2.0, 4.0]
+    assert all(a < b for a, b in zip(backoffs, backoffs[1:]))
+
+
+def test_same_step_counter_resets_on_progress():
+    rp = RestartPolicy(max_restarts=100)
+    assert rp.on_fault(step=5) == "restart"
+    assert rp.on_fault(step=5) == "restart"
+    assert rp.on_fault(step=6) == "restart"  # progress resets the streak
+    assert rp.on_fault(step=6) == "restart"
+    assert rp.on_fault(step=6) == "halt"     # 3rd hit on step 6
+
+
+# -------------------- HeartbeatMonitor --------------------
+
+def test_never_beaten_hosts_are_dead():
+    hb = HeartbeatMonitor(num_hosts=3, timeout_s=10)
+    # no host ever beat: all dead, at any time
+    assert hb.dead_hosts(now=0.0) == [0, 1, 2]
+    assert not hb.healthy(now=0.0)
+    hb.beat(1, now=0.0)
+    assert hb.dead_hosts(now=5.0) == [0, 2]
+
+
+# -------------------- Supervisor end-to-end --------------------
+
+def _mk_supervisor(policy=None, ckpt_every=2):
+    saves = {}
+
+    def save_fn(step, state):
+        saves[step] = state
+
+    def restore_fn():
+        step = max(saves)
+        return saves[step], step
+
+    save_fn(0, 0)  # initial checkpoint, restore target before first ckpt
+    return Supervisor(save_fn=save_fn, restore_fn=restore_fn,
+                      ckpt_every=ckpt_every, policy=policy), saves
+
+
+def test_supervisor_fault_backoff_restore_sequence():
+    """Injected fault at step 5 → backoff → restore from the step-4
+    checkpoint → recompute → exact final state, with the log recording
+    fault → restored in order and checkpoints at the cadence."""
+    sup, saves = _mk_supervisor()
+    hits = []
+
+    def train_fn(state, batch):
+        if batch == 5 and not hits:
+            hits.append(batch)
+            raise OSError("injected collective timeout")
+        return state + batch, {}
+
+    state, step = sup.run(train_fn, 0, data_at=lambda s: s,
+                          start_step=0, num_steps=10)
+    assert step == 10
+    assert state == sum(range(10))  # recomputation is idempotent
+    assert 4 in saves and saves[4] == sum(range(4))
+    fault_i = next(i for i, l in enumerate(sup.log) if l.startswith("fault@5"))
+    assert "OSError" in sup.log[fault_i] and "->restart" in sup.log[fault_i]
+    assert sup.log[fault_i + 1] == "restored@4"
+
+
+def test_supervisor_halts_on_deterministic_fault():
+    """A fault that reproduces at the same step every attempt must halt
+    with a RuntimeError instead of burning the restart budget."""
+    sup, _ = _mk_supervisor()
+
+    def train_fn(state, batch):
+        if batch == 3:
+            raise ValueError("deterministic poison batch")
+        return state + 1, {}
+
+    with pytest.raises(RuntimeError, match="halted after repeated faults"):
+        sup.run(train_fn, 0, data_at=lambda s: s, start_step=0, num_steps=10)
+    assert sum(1 for l in sup.log if l.startswith("fault@3")) == 3
+    assert sup.log[-1].endswith("->halt")
+
+
+def test_supervisor_halts_when_budget_exhausted():
+    sup, _ = _mk_supervisor(policy=RestartPolicy(max_restarts=1,
+                                                 backoff_s=0.0))
+    bombs = {1, 3}
+
+    def train_fn(state, batch):
+        if batch in bombs:
+            bombs.discard(batch)
+            raise OSError(f"transient at {batch}")
+        return state + 1, {}
+
+    with pytest.raises(RuntimeError, match="halted"):
+        sup.run(train_fn, 0, data_at=lambda s: s, start_step=0, num_steps=10)

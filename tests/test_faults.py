@@ -1,0 +1,323 @@
+"""repro.faults: seeded fault models, fault-aware compilation, and
+executor-level weight-fault injection (ISSUE 10 tentpole coverage).
+
+* FaultSet construction validates coordinates (cross-chip link ids,
+  negative indices, bad cell kinds) and canonicalizes to sorted tuples;
+* ``FaultSet.sample`` is seed-deterministic and *nested-monotone*: a
+  higher rate at the same seed yields a superset of faults (the property
+  that makes the bench's yield curve monotone by construction);
+* serpentine geometry: a chip contributes only its longest healthy
+  segment (dead tiles and cut links break runs, dead chips contribute 0);
+* fault-aware compile degrades the placement around faults (validated by
+  the shared legality checker), keeps the event closed-forms intact, and
+  raises ``FaultCapacityError`` with the arithmetic when a bounded fleet
+  cannot fit the workload;
+* ``faults=FaultSet.empty()`` is bitwise-identical to no faults (the
+  golden contract: the SAME cached CompiledProgram object);
+* weight faults realize once on the resolved float64 weights, so numpy
+  and Pallas executors consume byte-identical faulted arrays.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised via the stub CI leg
+    from _hypothesis_stub import given, settings, st
+
+from repro.core.arch import DEFAULT_ARCH
+from repro.core.executor import ProgramExecutor, random_weights
+from repro.core.mapping import ConvSpec, FCSpec, vgg11_cifar
+from repro.core.program import Workload, compile_program
+from repro.core.simulator import EVENT_FIELDS, network_event_totals
+from repro.faults import (
+    BlockFault,
+    FaultCapacityError,
+    FaultSet,
+    WeightFault,
+    apply_weight_faults,
+    chip_segments,
+    fleet_capacity,
+    usable_tiles,
+)
+from repro.search.space import validate_allocs, validate_candidate
+
+TPC = DEFAULT_ARCH.tiles_per_chip
+
+
+def tiny_workload() -> Workload:
+    return Workload("tiny-faults", (
+        ConvSpec("t.c0", 3, 3, 8, 8, 8, pool_k=2),
+        FCSpec("t.fc", 128, 10),
+    ))
+
+
+# -------------------- FaultSet model --------------------
+
+def test_faultset_validation():
+    with pytest.raises(ValueError, match="tile"):
+        FaultSet(dead_tiles=(-1,))
+    with pytest.raises(ValueError, match="link"):
+        # link TPC-1 of chip 0 would cross the chip boundary
+        FaultSet(dead_links=(TPC - 1,))
+    with pytest.raises(ValueError, match="n_chips"):
+        FaultSet(n_chips=0)
+    with pytest.raises(ValueError, match="cell_rate"):
+        FaultSet(cell_rate=1.5)
+    with pytest.raises(ValueError, match="kind"):
+        FaultSet(weight_faults=(WeightFault(0, 0, kind="melt"),))
+
+
+def test_faultset_canonicalizes_and_empty():
+    fs = FaultSet(dead_tiles=(5, 1, 5), dead_chips=(2,))
+    assert fs.dead_tiles == (1, 5)  # sorted, deduped
+    assert not fs.is_empty
+    assert FaultSet.empty().is_empty
+    assert FaultSet().is_empty
+    # hashable: the compile cache keys on it
+    assert hash(fs) == hash(FaultSet(dead_tiles=(1, 5), dead_chips=(2,)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_sample_deterministic_and_nested(seed):
+    """Same seed reproduces bitwise; a higher rate is a superset — the
+    nested-monotone property the yield curve's monotonicity rests on."""
+    lo = FaultSet.sample(0.02, seed, n_chips=6)
+    assert lo == FaultSet.sample(0.02, seed, n_chips=6)
+    hi = FaultSet.sample(0.20, seed, n_chips=6)
+    assert set(lo.dead_tiles) <= set(hi.dead_tiles)
+    assert set(lo.dead_links) <= set(hi.dead_links)
+    assert set(lo.dead_chips) <= set(hi.dead_chips)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), layer=st.integers(0, 3))
+def test_cell_fault_mask_deterministic_per_seed(seed, layer):
+    """The compact seeded weight-fault descriptor expands to the same
+    mask every time (per-layer child seeds, not a shared stream)."""
+    wl = tiny_workload()
+    prog = compile_program(wl)
+    w = random_weights(prog, seed=0)
+    fs = FaultSet(cell_rate=0.05, cell_seed=seed)
+    f1, i1 = apply_weight_faults(list(wl.layers), w, fs, prog.arch)
+    f2, i2 = apply_weight_faults(list(wl.layers), w, fs, prog.arch)
+    assert i1 == i2
+    assert all(np.array_equal(a, b) for a, b in zip(f1, f2))
+    # the originals were never mutated
+    w2 = random_weights(prog, seed=0)
+    assert all(np.array_equal(a, b) for a, b in zip(w, w2))
+
+
+def test_sample_rate_zero_is_fault_free_but_bounded():
+    fs = FaultSet.sample(0.0, 0, n_chips=3)
+    assert fs.dead_tiles == () and fs.dead_links == () and fs.dead_chips == ()
+    assert fs.n_chips == 3          # the fleet bound still applies
+    assert not fs.is_empty          # bounded != pristine
+
+
+# -------------------- serpentine geometry --------------------
+
+def test_chip_segments_and_usable_tiles():
+    # pristine chip: one full run
+    assert usable_tiles(FaultSet(), 0) == TPC
+    # a dead tile mid-chip splits the serpentine run
+    mid = TPC // 2
+    fs = FaultSet(dead_tiles=(mid,))
+    segs = chip_segments(fs, 0, DEFAULT_ARCH)
+    assert segs == ((0, mid), (mid + 1, TPC))
+    assert usable_tiles(fs, 0) == max(mid, TPC - mid - 1)
+    # a cut link between local positions 9 and 10 breaks the run there
+    fs = FaultSet(dead_links=(9,))
+    assert chip_segments(fs, 0, DEFAULT_ARCH) == ((0, 10), (10, TPC))
+    # a dead chip contributes nothing
+    fs = FaultSet(dead_chips=(1,))
+    assert usable_tiles(fs, 1) == 0
+    assert usable_tiles(fs, 0) == TPC
+    # fleet capacity sums longest-healthy-segments
+    assert fleet_capacity(FaultSet(dead_chips=(1,)), 3) == 2 * TPC
+
+
+# -------------------- fault-aware compilation --------------------
+
+def test_empty_faults_is_bitwise_golden():
+    """THE golden contract: empty/None faults return the SAME cached
+    CompiledProgram object as the pristine compile."""
+    wl = vgg11_cifar()
+    p0 = compile_program(wl)
+    assert compile_program(wl, faults=FaultSet.empty()) is p0
+    assert compile_program(wl, faults=None) is p0
+
+
+def test_degraded_placement_validates_and_prices_spill():
+    wl = vgg11_cifar()
+    p0 = compile_program(wl)
+    chips0 = max(c for a in p0.allocs for c in a.chip_ids) + 1
+    fs = FaultSet.sample(0.05, seed=3, n_chips=40)
+    pf = compile_program(wl, faults=fs)
+    assert pf is compile_program(wl, faults=fs)  # memoized
+    assert pf.faults == fs
+    # the shared legality validator accepts the degraded walk
+    validate_allocs(pf.allocs, pf.arch, faults=fs)
+    # no alloc lands on a dead chip
+    dead = set(fs.dead_chips)
+    assert all(c not in dead for a in pf.allocs for c in a.chip_ids)
+    # degradation spilled to extra chips (the off-chip cost model's input)
+    chips_f = max(c for a in pf.allocs for c in a.chip_ids) + 1
+    assert chips_f > chips0
+
+
+def test_degraded_events_match_closed_forms():
+    """Per-layer event totals are placement-independent closed forms, so
+    a degraded placement must reproduce them exactly."""
+    wl = vgg11_cifar()
+    fs = FaultSet.sample(0.05, seed=3, n_chips=40)
+    pf = compile_program(wl, faults=fs)
+    totals = network_event_totals(wl.layers, pf.arch)
+    assert all(pf.event_totals[f] == totals[f] for f in EVENT_FIELDS)
+
+
+def test_capacity_error_is_clear():
+    wl = vgg11_cifar()
+    # vgg11 needs 2 pristine chips; a 1-chip fleet can never fit it
+    with pytest.raises(FaultCapacityError, match="tiles"):
+        compile_program(wl, faults=FaultSet.sample(0.0, 0, n_chips=1))
+
+
+def test_faults_reject_non_greedy_mapping():
+    wl = vgg11_cifar()
+    with pytest.raises(ValueError, match="mapping"):
+        compile_program(wl, mapping="search",
+                        faults=FaultSet(dead_tiles=(0,)))
+
+
+def test_validate_candidate_rejects_fault_conflicts():
+    """The search-space validator learns the fault vocabulary: a pristine
+    candidate whose spans touch dead tiles must be rejected."""
+    from repro.search.space import greedy_candidate
+
+    wl = vgg11_cifar()
+    p0 = compile_program(wl)
+    cand = greedy_candidate(list(wl.layers), p0.arch)
+    # the greedy candidate validates without faults
+    validate_candidate(list(wl.layers), p0.arch, cand)
+    # kill the very first tile: layer 0's span now conflicts
+    with pytest.raises(ValueError, match="fault"):
+        validate_candidate(list(wl.layers), p0.arch, cand,
+                           faults=FaultSet(dead_tiles=(0,)))
+    # explicit starts and a fault set are mutually exclusive occupancy
+    # models in the shared alloc validator
+    with pytest.raises(ValueError, match="starts"):
+        validate_allocs(p0.allocs, p0.arch, starts=(0,) * len(p0.allocs),
+                        faults=FaultSet(dead_tiles=(0,)))
+
+
+# -------------------- executor-level injection --------------------
+
+def test_weight_fault_kinds_semantics():
+    wl = tiny_workload()
+    prog = compile_program(wl)
+    w = random_weights(prog, seed=0)
+    wlist = [w[l.name] for l in wl.layers]
+    faults = FaultSet(weight_faults=(
+        WeightFault(0, 0, kind="stuck0"),
+        WeightFault(0, 1, kind="flip"),
+        WeightFault(1, 2, kind="stuck1"),
+    ))
+    fw, info = apply_weight_faults(list(wl.layers), w, faults, prog.arch)
+    assert info["n_cells"] == 3
+    assert fw[0].flat[0] == 0.0
+    assert fw[0].flat[1] == -wlist[0].flat[1]
+    assert abs(fw[1].flat[2]) == np.abs(wlist[1]).max()
+    assert info["mask_checksum"] > 0
+
+
+def test_block_fault_zeroes_tile_block():
+    wl = tiny_workload()
+    prog = compile_program(wl)
+    w = random_weights(prog, seed=0)
+    wlist = [w[l.name] for l in wl.layers]
+    faults = FaultSet(dead_blocks=(BlockFault(1, 0, 0, 0),))
+    fw, info = apply_weight_faults(list(wl.layers), w, faults, prog.arch)
+    assert info["n_blocks"] == 1
+    # FC 128x10 fits one 256x256 tile: the whole weight drops out
+    assert np.all(fw[1] == 0)
+    assert np.array_equal(fw[0], wlist[0])
+    with pytest.raises(ValueError, match="block"):
+        apply_weight_faults(list(wl.layers), w,
+                            FaultSet(dead_blocks=(BlockFault(1, 5, 0, 0),)),
+                            prog.arch)
+
+
+def test_backends_consume_identical_faulted_weights():
+    """The bitwise cross-backend contract: faults realize once on the
+    resolved float64 list; numpy and jax executors then hold the same
+    bytes, and logits match an oracle run on pre-faulted weights."""
+    wl = tiny_workload()
+    prog = compile_program(wl)
+    w = random_weights(prog, seed=0)
+    fs = FaultSet(cell_rate=0.02, cell_seed=7)
+    ex_np = ProgramExecutor(prog, w, backend="numpy", faults=fs)
+    ex_jx = ProgramExecutor(prog, w, backend="jax", interpret=True,
+                            faults=fs)
+    assert ex_np.fault_info == ex_jx.fault_info
+    assert ex_np.fault_info["n_cells"] > 0
+    assert all(np.array_equal(a, b)
+               for a, b in zip(ex_np.weights, ex_jx.weights))
+    # the fault-masked ORACLE: apply the same faults by hand, run clean
+    fw, _ = apply_weight_faults(
+        list(wl.layers), ex_np._resolve_weights(list(wl.layers), w),
+        fs, prog.arch)
+    oracle = ProgramExecutor(prog, fw, backend="numpy")
+    imgs = np.random.default_rng(0).normal(size=(2,) + oracle.input_shape)
+    np.testing.assert_array_equal(ex_np.run(imgs).outputs,
+                                  oracle.run(imgs).outputs)
+
+
+def test_executor_inherits_program_faults_and_empty_is_clean():
+    wl = tiny_workload()
+    prog = compile_program(wl)
+    w = random_weights(prog, seed=0)
+    clean = ProgramExecutor(prog, w, backend="numpy")
+    assert clean.faults is None and clean.fault_info is None
+    # a fault-compiled program's executor picks up its FaultSet
+    wl_big = vgg11_cifar()
+    fs = FaultSet.sample(0.05, seed=3, n_chips=40)
+    pf = compile_program(wl_big, faults=fs)
+    ex = ProgramExecutor(pf, random_weights(pf, seed=0), backend="numpy")
+    assert ex.faults == fs
+    # placement-only faults don't touch weights
+    assert ex.fault_info is None
+    # an explicitly empty FaultSet executes bit-identically to clean
+    ex0 = ProgramExecutor(prog, w, backend="numpy", faults=FaultSet.empty())
+    imgs = np.random.default_rng(1).normal(size=(1,) + clean.input_shape)
+    np.testing.assert_array_equal(ex0.run(imgs).outputs,
+                                  clean.run(imgs).outputs)
+
+
+def test_degraded_program_executes_on_both_backends():
+    """Graceful degradation end to end: a fault-compiled program still
+    runs image→logits on both executor backends with matching outputs and
+    closed-form event totals."""
+    wl = tiny_workload()
+    fs = FaultSet(dead_tiles=(3,), n_chips=4)
+    pf = compile_program(wl, faults=fs)
+    w = random_weights(pf, seed=0)
+    ex_np = ProgramExecutor(pf, w, backend="numpy")
+    imgs = np.random.default_rng(2).normal(size=(2,) + ex_np.input_shape)
+    out_np = ex_np.run(imgs)
+    totals = network_event_totals(wl.layers, pf.arch)
+    assert all(ex_np.events[f] == totals[f] for f in EVENT_FIELDS)
+    ex_jx = ProgramExecutor(pf, w, backend="jax", interpret=True)
+    out_jx = ex_jx.run(imgs)
+    scale = max(float(np.abs(out_np.outputs).max()), 1e-30)
+    assert float(np.abs(out_jx.outputs - out_np.outputs).max()) / scale < 1e-4
+
+
+def test_cache_stats_exposes_fault_caches():
+    import repro.core as core
+    import repro.faults  # noqa: F401  (loads the chip_segments cache)
+
+    stats = core.cache_stats()
+    assert "compile_faulted" in stats
+    assert "chip_segments" in stats

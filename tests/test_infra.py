@@ -427,6 +427,50 @@ def test_compare_bench_sharded_and_checksum_fidelity_gate():
         1e-9, 0.5)[1] == 0
 
 
+def test_compare_bench_faults_kind_gates_resilience_curve():
+    """The faults artifact is its own kind (fault_rates is checked before
+    the other detectors' keys) and its resilience fields are fidelity-class:
+    a broken monotone-yield bool, a moved fault-mask checksum, or a lost
+    token-identity flag must fail strict CI, while wall_s stays perf."""
+    cb = _load_compare_bench()
+    base = dict(
+        fault_rates=[0.0, 0.01, 0.05, 0.10], seed=0, wall_s=85.0,
+        compile=dict(monotone_yield=True,
+                     yield_by_rate=dict(r0=1.0, r1=1.0, r5=0.125, r10=0.0),
+                     mean_extra_chips=dict(r1=2.25),
+                     mean_offchip_energy_img_j=dict(r1=3.5e-5)),
+        executor=dict(zero_matches_executor_baseline=True,
+                      logits_checksum_r0=117.5758,
+                      backends_fault_mask_identical=True,
+                      mask_checksum=dict(r1=16286.6, r5=81464.7, r10=162947.8),
+                      logits_l1_delta=dict(r5=12.0),
+                      argmax_delta_frac=dict(r10=0.25)),
+        serve=dict(zero_matches_serve_baseline=True,
+                   tokens_identical=dict(r1=True, r5=True, r10=True),
+                   completed=dict(r10=16), faults_injected=dict(r5=25),
+                   retries=dict(r10=52),
+                   makespan_ticks=dict(r0=124.0, r10=193.0),
+                   latency_p99_ticks=dict(r10=80.0)),
+    )
+    assert cb.detect_kind(base) == "faults"
+    assert cb.compare(base, json.loads(json.dumps(base)), 1e-9, 0.5)[1] == 0
+    # wall-clock drift is informational
+    rows, n = cb.compare(base, dict(base, wall_s=200.0), 1e-9, 0.5)
+    assert n == 0
+    assert {r["metric"]: r for r in rows}["wall_s"]["status"] == "drift"
+    # resilience fidelity breaks fail the gate
+    for tamper in (
+        dict(base, compile=dict(base["compile"], monotone_yield=False)),
+        dict(base, executor=dict(base["executor"],
+                                 mask_checksum=dict(r1=16286.6, r5=81464.7,
+                                                    r10=162000.0))),
+        dict(base, serve=dict(base["serve"],
+                              tokens_identical=dict(r1=True, r5=False,
+                                                    r10=True))),
+    ):
+        assert cb.compare(base, tamper, 1e-9, 0.5)[1] == 1
+
+
 def test_compare_bench_search_kind_and_fidelity_gate():
     """The mapping-search artifact: searched<=greedy / baseline-bitwise
     bools and the per-network hop ratios are fidelity-class; wall-clock

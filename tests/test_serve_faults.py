@@ -1,0 +1,280 @@
+"""Serving-tier robustness (ISSUE 10): per-request admission deadlines and
+transient slot/page fault injection with retry-and-re-prefill recovery.
+
+* deadlines: a request not admitted by ``arrival + deadline`` diverts to
+  ``queue.rejected`` with a "deadline exceeded" reason and an auditable
+  virtual-clock timestamp; ``deadline <= 0`` is refused at intake;
+* empty ``TransientFaults`` is bitwise golden (== no injection at all);
+* injected faults: every request — including the faulted ones — decodes
+  token-identical to the fault-free run (retry-and-re-prefill rebuilds the
+  PRNG chain), at a strictly larger makespan, with the fault counters
+  recorded in ``last_stats``;
+* deterministic (poisoned) faults and exhausted restart budgets halt the
+  loop with ``RuntimeError`` instead of burning the fleet;
+* the paged engine recovers through the same path (pages kept across the
+  retry);
+* the traffic simulator's payload is schema-versioned and carries the
+  rejection audit trail.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.faults import TransientFaults
+from repro.models.transformer import CallConfig, build_model
+from repro.runtime.fault_tolerance import RestartPolicy
+from repro.serve.admission import AdmissionQueue, Arrival
+from repro.serve.engine import Engine, Request
+from repro.serve.traffic import LengthMix, TrafficProfile, simulate
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("smollm-135m").reduced()
+    model = build_model(cfg, CallConfig(remat="none"))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_requests(cfg, *, n=6, temperature=0.0, max_new=8, deadline=None,
+                  seed=0):
+    rng = np.random.RandomState(seed)
+    return [
+        Request(
+            prompt=rng.randint(1, cfg.vocab_size, size=4 + (i % 4)).astype(
+                np.int32),
+            max_new_tokens=max_new,
+            temperature=temperature,
+            deadline=deadline,
+        )
+        for i in range(n)
+    ]
+
+
+# generous budget so recovery, not halting, is what's under test
+PATIENT = dict(max_restarts=10_000, backoff_s=1.0, backoff_mult=1.0)
+
+
+# -------------------- admission deadlines --------------------
+
+def test_deadline_rejections_are_timestamped(served):
+    """batch=1 + simultaneous arrivals: only the requests a single slot
+    can reach in time are served; the rest are purged with an auditable
+    "deadline exceeded" rejection carrying the purging poll's clock."""
+    cfg, model, params = served
+    eng = Engine(model, params, batch=1, max_seq=32)
+    reqs = make_requests(cfg, n=4, max_new=8, deadline=3.0)
+    queue = AdmissionQueue.from_requests(reqs, max_seq=eng.max_seq)
+    done = eng.serve(queue, seed=0, do_sample=False)
+    # request 0 is admitted at t=0; the others wait 8 decode ticks for the
+    # slot and lapse their 3-tick deadline on the way
+    assert [r is reqs[0] for r in done] == [True]
+    assert len(queue.rejected) == 3
+    for rj in queue.rejected:
+        assert rj.reason.startswith("deadline exceeded")
+        assert rj.time > 3.0  # the purge happened after the lapse...
+        assert rj.time <= eng.last_stats["makespan_ticks"]
+        assert rj.request.rejected == rj.reason
+    assert eng.last_stats["n_rejected"] == 3
+    # the served request is unaffected by its neighbours' deadlines
+    ref = eng.generate_sequential(make_requests(cfg, n=1, max_new=8), seed=0)
+    assert done[0].out_tokens == ref[0].out_tokens
+
+
+def test_patient_requests_never_deadline_reject(served):
+    cfg, model, params = served
+    eng = Engine(model, params, batch=2, max_seq=32)
+    reqs = make_requests(cfg, n=4, max_new=6, deadline=None)
+    queue = AdmissionQueue.from_requests(reqs, max_seq=eng.max_seq)
+    done = eng.serve(queue, seed=0, do_sample=False)
+    assert len(done) == 4 and not queue.rejected
+
+
+def test_nonpositive_deadline_refused_at_intake(served):
+    cfg, model, params = served
+    eng = Engine(model, params, batch=2, max_seq=32)
+    reqs = make_requests(cfg, n=2, max_new=4)
+    reqs[1].deadline = 0.0
+    queue = AdmissionQueue.from_requests(reqs, max_seq=eng.max_seq)
+    done = eng.serve(queue, seed=0, do_sample=False)
+    assert len(done) == 1
+    assert len(queue.rejected) == 1
+    assert "deadline=0.0 <= 0" in queue.rejected[0].reason
+
+
+def test_deadline_counts_from_arrival_not_defer(served):
+    """push_back preserves the original arrival time: a deferred admission
+    must not silently extend the deadline window."""
+    cfg, model, params = served
+    queue = AdmissionQueue([Arrival(0.0, r) for r in
+                            make_requests(cfg, n=1, deadline=5.0)])
+    queue.poll(0.0)
+    item = queue.pop()
+    assert item is not None
+    queue.push_back(*item)
+    queue.poll(4.0)   # still inside the window
+    assert len(queue) == 1
+    queue.poll(6.0)   # 6.0 > 0.0 + 5.0: lapsed, even though deferred at 0
+    assert len(queue) == 0
+    assert queue.rejected[0].reason.startswith("deadline exceeded")
+    assert queue.rejected[0].time == 6.0
+
+
+# -------------------- transient fault injection --------------------
+
+def test_empty_faults_is_bitwise_golden(served):
+    """faults=TransientFaults() (all rates 0, no poison) must take the
+    exact no-injection code path: same tokens, same stats, zero counters."""
+    cfg, model, params = served
+    eng = Engine(model, params, batch=2, max_seq=32)
+    mk = lambda: make_requests(cfg, n=4, max_new=6)
+    base_q = AdmissionQueue.from_requests(mk(), max_seq=eng.max_seq)
+    base = eng.serve(base_q, seed=0, do_sample=False)
+    base_stats = dict(eng.last_stats)
+    got_q = AdmissionQueue.from_requests(mk(), max_seq=eng.max_seq)
+    got = eng.serve(got_q, seed=0, do_sample=False, faults=TransientFaults())
+    for b, g in zip(base, got):
+        assert g.out_tokens == b.out_tokens
+    for key in ("decode_steps", "generated_tokens", "makespan_ticks"):
+        assert eng.last_stats[key] == base_stats[key]
+    assert eng.last_stats["faults_injected"] == 0
+    assert eng.last_stats["retries"] == 0
+    assert eng.last_stats["reprefills"] == 0
+
+
+def test_transient_faults_token_identical_recovery(served):
+    """The headline contract: at a 15% per-slot fault rate with a patient
+    restart budget, every request — faulted or not — finishes with tokens
+    identical to the fault-free run; only time is lost (backoff +
+    re-prefill), never correctness."""
+    cfg, model, params = served
+    eng = Engine(model, params, batch=2, max_seq=32)
+    mk = lambda: make_requests(cfg, n=6, max_new=8)
+    clean_q = AdmissionQueue.from_requests(mk(), max_seq=eng.max_seq)
+    clean = eng.serve(clean_q, seed=0, do_sample=False)
+    clean_span = eng.last_stats["makespan_ticks"]
+
+    faulty_q = AdmissionQueue.from_requests(mk(), max_seq=eng.max_seq)
+    faulty = eng.serve(
+        faulty_q, seed=0, do_sample=False,
+        faults=TransientFaults(slot_rate=0.15, seed=0),
+        restart_policy=RestartPolicy(**PATIENT), backoff_cap=4.0)
+    st = eng.last_stats
+    assert st["faults_injected"] > 0
+    assert st["retries"] == st["faults_injected"]
+    assert st["reprefills"] == st["retries"]
+    assert st["makespan_ticks"] > clean_span  # recovery costs ticks...
+    assert len(faulty) == len(clean)          # ...but loses no requests
+    by_index = {tuple(r.prompt.tolist()): r for r in clean}
+    for g in faulty:
+        assert g.done
+        assert g.out_tokens == by_index[tuple(g.prompt.tolist())].out_tokens
+
+
+def test_sampled_faulty_run_replays_oracle_chain(served):
+    """Temperature sampling through a faulty run: the retried step rebuilds
+    the PRNG chain, so sampled tokens equal the per-request oracle's."""
+    cfg, model, params = served
+    eng = Engine(model, params, batch=2, max_seq=32)
+    mk = lambda: make_requests(cfg, n=4, temperature=0.8, max_new=6)
+    queue = AdmissionQueue.from_requests(mk(), max_seq=eng.max_seq)
+    got = eng.serve(queue, seed=7,
+                    faults=TransientFaults(slot_rate=0.2, seed=1),
+                    restart_policy=RestartPolicy(**PATIENT))
+    assert eng.last_stats["faults_injected"] > 0
+    ref = eng.generate_sequential(mk(), seed=7)
+    by_prompt = {tuple(r.prompt.tolist()): r for r in ref}
+    for g in got:
+        assert g.out_tokens == by_prompt[tuple(g.prompt.tolist())].out_tokens
+
+
+def test_paged_engine_recovers_through_page_faults(served):
+    """Paged serving with per-page failure: pages stay held across the
+    retry and tokens still match the dense fault-free engine."""
+    cfg, model, params = served
+    dense = Engine(model, params, batch=2, max_seq=32)
+    paged = Engine(model, params, batch=2, max_seq=32, page_size=8)
+    mk = lambda: make_requests(cfg, n=4, max_new=6)
+    clean = dense.serve(
+        AdmissionQueue.from_requests(mk(), max_seq=dense.max_seq),
+        seed=0, do_sample=False)
+    got = paged.serve(
+        AdmissionQueue.from_requests(mk(), max_seq=paged.max_seq),
+        seed=0, do_sample=False,
+        faults=TransientFaults(page_rate=0.1, seed=3),
+        restart_policy=RestartPolicy(**PATIENT), backoff_cap=2.0)
+    assert paged.last_stats["faults_injected"] > 0
+    by_prompt = {tuple(r.prompt.tolist()): r for r in clean}
+    for g in got:
+        assert g.out_tokens == by_prompt[tuple(g.prompt.tolist())].out_tokens
+    # the wave returned every page despite the mid-flight re-prefills
+    alloc = paged.slots.allocator
+    assert alloc.n_held == 0 and alloc.n_free == alloc.n_pages
+
+
+def test_poisoned_fault_halts_with_clear_error(served):
+    """A deterministic fault (same request, same token, every attempt)
+    must trip the RestartPolicy's same-step counter and halt."""
+    cfg, model, params = served
+    eng = Engine(model, params, batch=2, max_seq=32)
+    queue = AdmissionQueue.from_requests(make_requests(cfg, n=2, max_new=6),
+                                         max_seq=eng.max_seq)
+    with pytest.raises(RuntimeError,
+                       match="halted after repeated faults at request 0"):
+        eng.serve(queue, seed=0, do_sample=False,
+                  faults=TransientFaults(poison=((0, 1),)),
+                  restart_policy=RestartPolicy(**PATIENT))
+
+
+def test_exhausted_restart_budget_halts(served):
+    cfg, model, params = served
+    eng = Engine(model, params, batch=2, max_seq=32)
+    queue = AdmissionQueue.from_requests(make_requests(cfg, n=2, max_new=6),
+                                         max_seq=eng.max_seq)
+    with pytest.raises(RuntimeError, match="restart budget 0"):
+        eng.serve(queue, seed=0, do_sample=False,
+                  faults=TransientFaults(poison=((1, 2),)),
+                  restart_policy=RestartPolicy(max_restarts=0))
+
+
+# -------------------- traffic payload audit trail --------------------
+
+def _profile(**kw):
+    base = dict(
+        name="faults-audit", num_requests=8, arrival="burst", burst_size=8,
+        prompt_lens=LengthMix(choices=[6]), output_lens=LengthMix(choices=[8]),
+        num_users=1, requests_per_user_tick=0.5, seed=0,
+    )
+    base.update(kw)
+    return TrafficProfile(**base)
+
+
+def test_traffic_payload_carries_rejection_audit(served):
+    """A bursty wave against one slot under a tight deadline: the payload
+    is schema_version 2 and records every rejection with its index, its
+    virtual-clock timestamp, and the human-readable reason."""
+    cfg, model, params = served
+    eng = Engine(model, params, batch=1, max_seq=32)
+    payload = simulate(eng, _profile(deadline=4.0))
+    assert payload["schema_version"] == 2
+    assert payload["deadline"] == 4.0
+    assert payload["n_deadline_rejected"] > 0
+    assert payload["n_deadline_rejected"] == payload["n_rejected"]
+    assert payload["n_accepted"] + payload["n_rejected"] == 8
+    assert len(payload["rejections"]) == payload["n_rejected"]
+    for rj in payload["rejections"]:
+        assert set(rj) == {"index", "time", "reason"}
+        assert rj["reason"].startswith("deadline exceeded")
+        assert 0.0 < rj["time"] <= payload["makespan_ticks"]
+    assert payload["matches_sequential"]  # survivors still match the oracle
+
+
+def test_traffic_payload_without_deadline(served):
+    cfg, model, params = served
+    eng = Engine(model, params, batch=2, max_seq=32)
+    payload = simulate(eng, _profile(deadline=None))
+    assert payload["schema_version"] == 2
+    assert payload["deadline"] is None
+    assert payload["n_deadline_rejected"] == 0
+    assert payload["rejections"] == []

@@ -3,7 +3,8 @@
 Diffs a freshly produced sweep (`benchmarks/sweep.py`), serve
 (`benchmarks/serve_bench.py`), traffic (`serve_bench.py --traffic`),
 executor (`benchmarks/executor_bench.py`),
-or mapping-search (`benchmarks/search_bench.py`)
+mapping-search (`benchmarks/search_bench.py`),
+or fault-resilience (`benchmarks/faults_bench.py`)
 JSON artifact against a committed baseline in ``benchmarks/baselines/`` and
 emits a GitHub-flavored markdown table — pipe it into
 ``$GITHUB_STEP_SUMMARY`` to surface drift on every run (ROADMAP: "compare
@@ -169,6 +170,41 @@ RIVALS_METRICS: List[Tuple[str, str]] = [
     ("wall_s", "perf"),
 ]
 
+# faults artifact (benchmarks/faults_bench.py): the resilience curves.
+# Everything is seeded/closed-form/virtual-tick deterministic, so the whole
+# curve gates as fidelity: compile yield + degradation price per rate, the
+# 0-rate anchors against the committed executor/serve baselines, the
+# cross-backend fault-mask identity bool, weight-fault fingerprints, and
+# the serve-tier retry/latency counters. Only wall-clock is perf-class.
+FAULTS_METRICS: List[Tuple[str, str]] = [
+    ("compile.monotone_yield", "fidelity"),
+    ("compile.yield_by_rate.r0", "fidelity"),
+    ("compile.yield_by_rate.r1", "fidelity"),
+    ("compile.yield_by_rate.r5", "fidelity"),
+    ("compile.yield_by_rate.r10", "fidelity"),
+    ("compile.mean_extra_chips.r1", "fidelity"),
+    ("compile.mean_offchip_energy_img_j.r1", "fidelity"),
+    ("executor.zero_matches_executor_baseline", "fidelity"),
+    ("executor.logits_checksum_r0", "fidelity"),
+    ("executor.backends_fault_mask_identical", "fidelity"),
+    ("executor.mask_checksum.r1", "fidelity"),
+    ("executor.mask_checksum.r5", "fidelity"),
+    ("executor.mask_checksum.r10", "fidelity"),
+    ("executor.logits_l1_delta.r5", "fidelity"),
+    ("executor.argmax_delta_frac.r10", "fidelity"),
+    ("serve.zero_matches_serve_baseline", "fidelity"),
+    ("serve.tokens_identical.r1", "fidelity"),
+    ("serve.tokens_identical.r5", "fidelity"),
+    ("serve.tokens_identical.r10", "fidelity"),
+    ("serve.completed.r10", "fidelity"),
+    ("serve.faults_injected.r5", "fidelity"),
+    ("serve.retries.r10", "fidelity"),
+    ("serve.makespan_ticks.r0", "fidelity"),
+    ("serve.makespan_ticks.r10", "fidelity"),
+    ("serve.latency_p99_ticks.r10", "fidelity"),
+    ("wall_s", "perf"),
+]
+
 METRICS_BY_KIND: Dict[str, List[Tuple[str, str]]] = {
     "sweep": SWEEP_METRICS,
     "serve": SERVE_METRICS,
@@ -176,10 +212,13 @@ METRICS_BY_KIND: Dict[str, List[Tuple[str, str]]] = {
     "search": SEARCH_METRICS,
     "traffic": TRAFFIC_METRICS,
     "rivals": RIVALS_METRICS,
+    "faults": FAULTS_METRICS,
 }
 
 
 def detect_kind(payload: Dict) -> str:
+    if "fault_rates" in payload:
+        return "faults"
     if "ttft_p99_ticks" in payload:
         return "traffic"
     if "rival" in payload and "crossover" in payload:
@@ -195,7 +234,7 @@ def detect_kind(payload: Dict) -> str:
         return "serve"
     raise SystemExit(
         "compare_bench: unrecognized artifact (not sweep/serve/executor/"
-        "search/traffic)")
+        "search/traffic/faults)")
 
 
 def extract(payload: Dict, path: str) -> Optional[float]:
